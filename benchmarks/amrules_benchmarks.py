@@ -1,0 +1,105 @@
+"""AMRules benchmarks (paper section 7.3): Fig. 12 throughput,
+Fig. 14-16 MAE/RMSE, Tab. 6/7 memory."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import make_stream, state_bytes
+from repro.data.generators import ElectricityLikeGenerator, WaveformGenerator
+from repro.ml.amrules import AMRules, HAMR, RulesConfig, VAMR
+
+ROWS = []
+
+
+def emit(name, us_per_call, derived):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+DATASETS = [
+    ("electricity", ElectricityLikeGenerator(), 12),
+    ("waveform", WaveformGenerator(), 40),
+    ("airlines", ElectricityLikeGenerator(seed=42, n_attrs=10), 10),
+]
+
+
+def _run(learner, xs, ys):
+    state = learner.init()
+    step = jax.jit(learner.step)
+    st, m = step(state, xs[0], ys[0])
+    jax.block_until_ready(m["seen"])
+    t0 = time.perf_counter()
+    abse = sqe = seen = 0.0
+    for i in range(xs.shape[0]):
+        state, m = step(state, xs[i], ys[i])
+        abse += float(m["abs_err"])
+        sqe += float(m["sq_err"])
+        seen += float(m["seen"])
+    jax.block_until_ready(jax.tree.leaves(state)[0])
+    dt = time.perf_counter() - t0
+    return state, abse / seen, (sqe / seen) ** 0.5, seen / dt
+
+
+def fig12_throughput(fast=True):
+    n_b = 25 if fast else 80
+    for tag, gen, m in DATASETS[: 2 if fast else 3]:
+        xs, ys = make_stream(gen, n_b, 512, 8, classification=False)
+        ys = ys.astype(jnp.float32)
+        rc = RulesConfig(n_attrs=m, n_bins=8, max_rules=64, n_min=200)
+        out = {}
+        for name, mk in [
+            ("MAMR", lambda: AMRules(rc)),
+            ("VAMR", lambda: VAMR(rc)),
+            ("HAMR-1", lambda: HAMR(rc, replicas=1)),
+            ("HAMR-2", lambda: HAMR(rc, replicas=2)),
+        ]:
+            _, mae, rmse, thr = _run(mk(), xs, ys)
+            out[name] = thr
+        emit(f"fig12.throughput.{tag}", 0.0,
+             ";".join(f"{k}={v:.0f}/s" for k, v in out.items()))
+
+
+def fig1416_error(fast=True):
+    n_b = 25 if fast else 80
+    for tag, gen, m in DATASETS[: 2 if fast else 3]:
+        xs, ys = make_stream(gen, n_b, 512, 8, classification=False)
+        ys = ys.astype(jnp.float32)
+        rng = float(ys.max() - ys.min()) or 1.0
+        rc = RulesConfig(n_attrs=m, n_bins=8, max_rules=64, n_min=200)
+        out = []
+        for name, mk in [
+            ("MAMR", lambda: AMRules(rc)),
+            ("VAMR", lambda: VAMR(rc)),
+            ("HAMR-2", lambda: HAMR(rc, replicas=2)),
+        ]:
+            st, mae, rmse, thr = _run(mk(), xs, ys)
+            out.append(f"{name}:mae={mae/rng:.4f},rmse={rmse/rng:.4f},"
+                       f"rules={int(st['n_created'])}")
+        emit(f"fig1416.error.{tag}", 0.0, ";".join(out))
+
+
+def tab67_memory(fast=True):
+    for tag, gen, m in DATASETS[:2]:
+        rc = RulesConfig(n_attrs=m, n_bins=8, max_rules=64, n_min=200)
+        amr = AMRules(rc)
+        st = amr.init()
+        total = state_bytes(st)
+        stats = state_bytes(st["stats"])
+        # VAMR: aggregator keeps bodies/heads; learners shard the stats
+        agg = total - stats
+        out = [f"MAMR={total/2**20:.2f}MiB", f"VAMR.agg={agg/2**20:.2f}MiB"]
+        for p in (1, 2, 4, 8):
+            out.append(f"VAMR.learner_p{p}={stats/p/2**20:.2f}MiB")
+        emit(f"tab67.memory.{tag}", 0.0, ";".join(out))
+
+
+def main(fast=True):
+    fig12_throughput(fast)
+    fig1416_error(fast)
+    tab67_memory(fast)
+    return ROWS

@@ -1,0 +1,67 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.generators import bin_numeric
+
+
+def make_stream(gen, n_batches, batch, n_bins, *, seed=0, classification=True):
+    key = jax.random.PRNGKey(seed)
+    sample = getattr(gen, "sample_classification", None)
+    if not classification or sample is None:
+        sample = gen.sample
+    xs, ys = [], []
+    for _ in range(n_batches):
+        key, k = jax.random.split(key)
+        x, y = sample(k, batch)
+        xs.append(bin_numeric(x, n_bins) if n_bins else x)
+        ys.append(y)
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+def run_prequential(learner, xs, ys, *, name=""):
+    """Returns (final_acc_or_err, throughput inst/s, wall seconds)."""
+    state = learner.init(jax.random.PRNGKey(0)) if _wants_key(learner) \
+        else learner.init()
+    step = jax.jit(learner.step)
+    # warmup/compile
+    state2, m = step(state, xs[0], ys[0])
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    corr = seen = abse = 0.0
+    for i in range(xs.shape[0]):
+        state, m = step(state, xs[i], ys[i])
+        corr += float(m.get("correct", 0.0))
+        abse += float(m.get("abs_err", 0.0))
+        seen += float(m["seen"])
+    jax.block_until_ready(jax.tree.leaves(state)[0])
+    dt = time.perf_counter() - t0
+    metric = corr / seen if corr else abse / seen
+    return metric, seen / dt, dt
+
+
+def _wants_key(learner):
+    import inspect
+    sig = inspect.signature(learner.init)
+    return len(sig.parameters) >= 1 and \
+        next(iter(sig.parameters.values())).default is inspect.Parameter.empty
+
+
+def acc_curve(learner, xs, ys):
+    state = learner.init(jax.random.PRNGKey(0)) if _wants_key(learner) \
+        else learner.init()
+    step = jax.jit(learner.step)
+    accs = []
+    for i in range(xs.shape[0]):
+        state, m = step(state, xs[i], ys[i])
+        accs.append(float(m["correct"]) / float(m["seen"]))
+    return accs
+
+
+def state_bytes(state):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(state))

@@ -1,0 +1,79 @@
+"""LM dry-run roofline table: reads results/dryrun/*.json (produced by
+``python -m repro.launch.dryrun --all --multi-pod both``) and emits the
+section-Roofline table + CSV rows.  Also runs a live micro-benchmark of the
+smoke-scale train step (wall-clock on this host, compile-sanity)."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+ROWS = []
+
+
+def emit(name, us_per_call, derived):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def roofline_table(results_dir="results/dryrun"):
+    d = Path(results_dir)
+    recs = []
+    for p in sorted(d.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    if not recs:
+        emit("roofline.table", 0.0, "NO_DRYRUN_RESULTS_run_dryrun_first")
+        return recs
+    for r in recs:
+        ro = r["roofline"]
+        emit(
+            f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}", 0.0,
+            f"tc={ro['t_compute_ms']:.1f}ms;tm={ro['t_memory_ms']:.1f}ms;"
+            f"tcoll={ro['t_collective_ms']:.1f}ms;bott={ro['bottleneck']};"
+            f"useful={ro['useful_flop_ratio']:.3f};"
+            f"frac={ro['roofline_fraction']:.4f};"
+            f"peakGiB={r['memory']['peak_bytes_per_device']/2**30:.2f}")
+    return recs
+
+
+def smoke_train_walltime(fast=True):
+    """Live wall-clock of one smoke-config train step per family."""
+    import jax.numpy as jnp
+    from repro.configs.base import get_smoke_config
+    from repro.launch.specs import make_batch
+    from repro.launch.steps import make_train_step
+    from repro.models.lm import LanguageModel
+    from repro.models.params import init_params
+    from repro.optim.adamw import AdamW
+
+    archs = ["minitron_4b", "falcon_mamba_7b"] if fast else [
+        "minitron_4b", "falcon_mamba_7b", "deepseek_v3_671b",
+        "recurrentgemma_9b", "whisper_medium"]
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        model = LanguageModel(cfg)
+        key = jax.random.PRNGKey(0)
+        params = init_params(model.param_defs(), key)
+        opt = AdamW(lr=1e-3)
+        st = opt.init(params)
+        batch = make_batch(cfg, 4, 128, key)
+        step = jax.jit(make_train_step(cfg, opt))
+        p, s, m = step(params, st, batch)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        n = 5
+        for _ in range(n):
+            p, s, m = step(p, s, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / n
+        emit(f"lm.smoke_train.{arch}", dt * 1e6, f"loss={float(m['loss']):.3f}")
+
+
+def main(fast=True):
+    roofline_table()
+    smoke_train_walltime(fast)
+    return ROWS

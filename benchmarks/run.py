@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  --full runs paper-scale streams;
+the default fast mode keeps the whole suite CPU-friendly.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only vht|amrules|lm|kernels]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    fast = not args.full
+
+    from benchmarks import amrules_benchmarks, kernel_benchmarks, lm_roofline
+    from benchmarks import vht_benchmarks
+
+    suites = {
+        "vht": vht_benchmarks.main,
+        "amrules": amrules_benchmarks.main,
+        "lm": lm_roofline.main,
+        "kernels": kernel_benchmarks.main,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        try:
+            fn(fast=fast)
+        except Exception as e:  # keep the harness going, flag the suite
+            failures += 1
+            print(f"{name}.SUITE_FAILED,0,{type(e).__name__}:{e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Distributed AMRules (paper section 7): prequential MAE/RMSE of MAMR vs
+VAMR vs HAMR on the electricity-like stream (Fig. 14 analogue).
+
+Run:  PYTHONPATH=src python examples/amrules_regression.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.generators import ElectricityLikeGenerator, bin_numeric
+from repro.ml.amrules import AMRules, HAMR, RulesConfig, VAMR
+
+
+def run(learner, gen, n_batches=60, batch=512, n_bins=8):
+    state = learner.init()
+    step = jax.jit(learner.step)
+    key = jax.random.PRNGKey(0)
+    abse = sqe = seen = 0.0
+    for _ in range(n_batches):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, batch)
+        state, m = step(state, bin_numeric(x, n_bins), y.astype(jnp.float32))
+        abse += float(m["abs_err"])
+        sqe += float(m["sq_err"])
+        seen += float(m["seen"])
+    return abse / seen, (sqe / seen) ** 0.5, int(state["n_created"])
+
+
+def main():
+    gen = ElectricityLikeGenerator()
+    rc = RulesConfig(n_attrs=12, n_bins=8, max_rules=64, n_min=200)
+    print(f"{'variant':10s} {'MAE':>8s} {'RMSE':>8s} {'rules':>6s}")
+    for name, mk in [
+        ("MAMR", lambda: AMRules(rc)),
+        ("VAMR", lambda: VAMR(rc)),
+        ("HAMR-2", lambda: HAMR(rc, replicas=2)),
+    ]:
+        mae, rmse, nr = run(mk(), gen)
+        print(f"{name:10s} {mae:8.4f} {rmse:8.4f} {nr:6d}")
+    print("\nDistributed variants track the sequential MAMR error "
+          "(paper Fig. 14-16) with bounded-staleness rule expansion.")
+
+
+if __name__ == "__main__":
+    main()

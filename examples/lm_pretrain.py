@@ -1,0 +1,38 @@
+"""End-to-end LM training driver (assignment deliverable b): train a ~100M
+transformer for a few hundred steps on CPU with the full substrate --
+sharded params, AdamW, cosine schedule, async checkpointing, restart.
+
+Run:  PYTHONPATH=src python examples/lm_pretrain.py [--steps 300]
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-param qwen-family config: the smoke config scaled up
+    losses = train_mod.main([
+        "--arch", "qwen15_4b", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "512",
+        "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100",
+        "--log-every", "25",
+    ])
+    first = sum(losses[:10]) / 10
+    last = sum(losses[-10:]) / 10
+    print(f"[example] mean loss first10={first:.4f} last10={last:.4f}")
+    assert last < first, "training did not reduce loss"
+    print("[example] OK -- loss decreased; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

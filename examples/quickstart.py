@@ -1,0 +1,39 @@
+"""Quickstart: the paper's canonical task -- PrequentialEvaluation of a
+Vertical Hoeffding Tree on a streaming source (the JAX analogue of
+
+  bin/samoa local target/SAMOA-Local-....jar "PrequentialEvaluation
+      -l classifiers.trees.VerticalHoeffdingTree -s (ArffFileStream ...)"
+
+).  Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.data.generators import CovtypeLikeGenerator
+from repro.data.pipeline import StreamPipeline
+from repro.ml.htree import TreeConfig
+from repro.ml.vht import VHT, VHTConfig
+
+
+def main():
+    gen = CovtypeLikeGenerator()
+    tc = TreeConfig(n_attrs=gen.n_attrs, n_bins=8, n_classes=gen.n_classes,
+                    max_nodes=255, n_min=200)
+    vht = VHT(VHTConfig(tc))
+    state = vht.init()
+    step = jax.jit(vht.step)
+
+    pipeline = StreamPipeline(gen, batch=512, n_batches=100, n_bins=8)
+    correct = seen = 0.0
+    for i, (xb, y) in enumerate(pipeline):
+        state, m = step(state, xb, y)
+        correct += float(m["correct"])
+        seen += float(m["seen"])
+        if (i + 1) % 20 == 0:
+            print(f"instances={int(seen):>7d}  prequential-acc="
+                  f"{correct/seen:.4f}  tree-nodes={int(m['n_nodes'])}")
+    print(f"final accuracy {correct/seen:.4f}")
+
+
+if __name__ == "__main__":
+    main()

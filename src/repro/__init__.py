@@ -1,0 +1,9 @@
+"""repro: Apache SAMOA in JAX -- distributed streaming ML platform
+(Topology/Processor/Stream + pluggable engines), its algorithm library
+(VHT, AMRules, CluStream, adaptive ensembles), and the multi-pod LM
+training/serving substrate built on the same sharding primitives.
+
+See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,97 @@
+"""Top-contributor profiler over the loop-aware HLO cost model.
+
+The dry-run's 'profile': ranks (computation, fused-op) pairs by HBM-traffic
+and FLOP contribution, trip-count scaled -- what a wall-clock profiler
+would show per kernel, reconstructed structurally from the compiled HLO.
+
+  from repro.analysis.profile_hlo import top_contributors
+  rows = top_contributors(compiled.as_text(), by="bytes", n=20)
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.analysis import hlo_cost as H
+
+
+def top_contributors(hlo: str, by: str = "bytes", n: int = 20):
+    comps = H.parse_computations(hlo)
+    if not comps:
+        return []
+    entry = next((c for c in comps if c.startswith("main")),
+                 list(comps.keys())[-1])
+    fl = defaultdict(float)
+    bt = defaultdict(float)
+
+    def walk(name, mult, fused):
+        body = comps.get(name, [])
+        shapes = {i.name: i.shape for i in body}
+        for ins in body:
+            op = ins.opcode
+            if op == "while":
+                b = H._called(ins.rest, "body")
+                c = H._called(ins.rest, "condition")
+                t = H.trip_count(c, comps) if c else 1
+                if b:
+                    walk(b, mult * max(t, 1), fused)
+                continue
+            if op == "fusion":
+                c = H._called(ins.rest, "calls")
+                key = (name.split("_spmd")[0], ins.name.split(".")[0])
+                if c:
+                    walk(c, mult, True)
+                if not fused:
+                    root = H._fusion_root(comps.get(c or "", []))
+                    if root is not None and root.opcode == "dynamic-update-slice":
+                        b = 2 * H._dus_update_bytes(root, comps.get(c, []))
+                        ob = H._shape_bytes(ins.shape)
+                        for o in H._operands(ins.rest):
+                            x = H._shape_bytes(shapes.get(o, ""))
+                            if x != ob:
+                                b += x
+                    else:
+                        b = H._shape_bytes(ins.shape)
+                        for o in H._operands(ins.rest):
+                            b += H._shape_bytes(shapes.get(o, ""))
+                    bt[key] += b * mult
+                continue
+            if op in ("call", "async-start"):
+                for cn in H._calls_list(ins.rest):
+                    walk(cn, mult, fused)
+                continue
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all"):
+                continue
+            key = (name.split("_spmd")[0], f"{op}:{ins.name.split('.')[0]}")
+            if op == "dot":
+                fl[key] += H._dot_flops(ins, shapes) * mult
+            elif op in H.ELEMENTWISE:
+                fl[key] += H._shape_elems(ins.shape) * mult
+            if fused:
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = H._operands(ins.rest)
+                b = (2 * H._shape_bytes(shapes.get(ops_[1], ""))
+                     if len(ops_) > 1 else 0)
+            elif op == "dynamic-slice":
+                b = 2 * H._shape_bytes(ins.shape)
+            else:
+                b = H._shape_bytes(ins.shape)
+                for o in H._operands(ins.rest):
+                    b += H._shape_bytes(shapes.get(o, ""))
+            bt[key] += b * mult
+
+    walk(entry, 1.0, False)
+    src = bt if by == "bytes" else fl
+    total = sum(src.values()) or 1.0
+    rows = sorted(src.items(), key=lambda kv: -kv[1])[:n]
+    return [(f"{c}/{o}", v, v / total) for (c, o), v in rows]
+
+
+def print_profile(hlo: str, by: str = "bytes", n: int = 20):
+    rows = top_contributors(hlo, by=by, n=n)
+    unit = "B" if by == "bytes" else "flop"
+    for name, v, frac in rows:
+        print(f"{v:12.3e} {unit}  {frac*100:5.1f}%  {name}")
+    return rows

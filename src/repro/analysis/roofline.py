@@ -1,0 +1,273 @@
+"""Roofline-term extraction from AOT-compiled artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * LINK_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the optimized HLO text and sum the
+*output* operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, scaled by the bytes each byte must traverse
+(ring algorithm factors over the participating group size).
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (we use 3 links usable per chip for pod-internal collectives, and count
+the cross-pod 'pod' axis at the same per-link rate, noted in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (per direction)
+DCN_BW = 25e9                # bytes/s per chip across pods (data-center NW)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[16,1024,512]' or a
+    tuple '(bf16[...], f32[...])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output sizes of collective ops in (optimized) HLO text.
+
+    Ring-cost scaling: an all-gather of output size N over group size g moves
+    ~N*(g-1)/g bytes per chip; an all-reduce ~2*N*(g-1)/g; all-to-all ~N*(g-1)/g;
+    reduce-scatter ~N (input) ~= N_out*g*(g-1)/g.  We apply these so the
+    'collective' roofline term is per-chip traversal time, not just tensor size.
+    """
+    counts: dict = defaultdict(int)
+    by_kind: dict = defaultdict(float)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # form:  %name = TYPE[..] op-name(...), replica_groups=...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z\-]+)", ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        kind = next((k for k in _COLL_KINDS if op.startswith(k)), None)
+        if kind is None or op.endswith("-start") and False:
+            continue
+        if op.endswith("-done"):
+            continue  # async pair: count only the -start
+        out_bytes = _shape_bytes(shape_str)
+        g = _group_size(ls)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-reduce":
+            traffic = 2.0 * out_bytes * frac
+        elif kind == "all-gather":
+            traffic = out_bytes * frac
+        elif kind == "reduce-scatter":
+            traffic = out_bytes * (g - 1)   # input = out*g; per-chip ~out*(g-1)
+        elif kind == "collective-permute":
+            traffic = out_bytes
+        else:  # all-to-all
+            traffic = out_bytes * frac
+        counts[kind] += 1
+        by_kind[kind] += traffic
+    return CollectiveStats(dict(counts), dict(by_kind))
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota form [ngroups, group_size]
+        return int(m.group(2))
+    return 1
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    bytes_per_device: float
+    coll_counts: dict
+    model_bytes: float = 0.0  # minimal algorithmic HBM traffic (global)
+    dcn_bytes: float = 0.0    # pod-crossing share of coll_bytes
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes is per-chip traversal traffic; pod-crossing groups ride
+        # the (slower) DCN
+        ici = max(self.coll_bytes - self.dcn_bytes, 0.0)
+        return ici / LINK_BW + self.dcn_bytes / DCN_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_time / achieved-bound time.
+
+        ideal_time is the ALGORITHMIC lower bound: max of (model FLOPs at
+        peak compute) and (minimal algorithmic bytes at peak HBM bw) -- so
+        decode cells, which are legitimately memory-bound, are scored
+        against the bandwidth roofline rather than an unreachable compute
+        roofline.  The denominator is the max of the three achieved terms."""
+        ideal_c = self.model_flops / (self.chips * PEAK_FLOPS)
+        ideal_m = self.model_bytes / (self.chips * HBM_BW)
+        ideal = max(ideal_c, ideal_m)
+        dom = max(self.t_compute, self.t_memory, self.t_collective)
+        return ideal / dom if dom else 0.0
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.hlo_flops:.3e} | {self.t_compute*1e3:.2f} | "
+                f"{self.t_memory*1e3:.2f} | {self.t_collective*1e3:.2f} | "
+                f"{self.bottleneck} | {self.useful_ratio:.2f} | "
+                f"{self.roofline_fraction:.3f} |")
+
+
+def analyze(compiled, lowered_text: str, *, arch, shape, mesh_name, chips,
+            model_flops, model_bytes=0.0) -> Roofline:
+    """Roofline terms from the loop-aware HLO cost model.
+
+    XLA's cost_analysis() counts while-loop bodies once -- useless for
+    scan-over-layers models -- so FLOPs/bytes come from
+    analysis.hlo_cost.analyze_hlo (trip-count multiplied, fusion-granular
+    bytes).  The HLO text is the SPMD per-device module; x chips = global.
+    """
+    from repro.analysis.hlo_cost import analyze_hlo
+
+    cost = analyze_hlo(lowered_text)
+    try:
+        ma = compiled.memory_analysis()
+        per_dev = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                   + ma.temp_size_in_bytes) if ma else 0
+    except Exception:
+        per_dev = 0
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=cost.flops * chips, hlo_bytes=cost.bytes * chips,
+        coll_bytes=cost.total_coll_bytes, model_flops=model_flops,
+        bytes_per_device=per_dev,
+        coll_counts={k: int(v) for k, v in cost.coll_counts.items()},
+        model_bytes=model_bytes, dcn_bytes=cost.dcn_bytes,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D for training; 2*N_active*D for a decode/prefill forward."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def _cache_bytes(cfg, shape) -> float:
+    """Decode-time per-step cache read traffic (global, bytes)."""
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    if cfg.family == "ssm":
+        return L * B * cfg.d_inner * (cfg.ssm_state * 4 + (cfg.ssm_conv - 1) * 2)
+    if cfg.attn_type == "mla":
+        return L * B * S * (cfg.kv_lora_rank + cfg.rope_head_dim) * 2
+    if cfg.family == "hybrid":
+        unit = len(cfg.block_pattern)
+        n_attn = sum(1 for k in cfg.block_pattern if k != "rec") * (L // unit)
+        n_rec = L - n_attn
+        attn_b = n_attn * B * min(cfg.window or S, S) * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        rec_b = n_rec * B * cfg.d_rnn * (4 + 3 * 2)
+        return attn_b + rec_b
+    w = min(cfg.window, S) if cfg.window else S
+    kv = L * B * w * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    if cfg.is_encoder_decoder:
+        kv += L * B * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2  # cross cache
+    return kv
+
+
+def model_bytes_estimate(cfg, shape) -> float:
+    """Minimal algorithmic HBM traffic per step (global bytes).
+
+    train:   params read (bf16) + grad write (bf16) + Adam m/v read+write
+             (fp32) + master read+write (fp32) = 28 B/param, plus one
+             activation read+write per layer boundary (remat recompute
+             roughly doubles activation traffic -> x3).
+    prefill: params once + KV write + activations.
+    decode:  active params once + cache read.
+    """
+    n = cfg.n_params()
+    n_act = cfg.n_active_params()
+    d, L = cfg.d_model, cfg.n_layers
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 28.0 * n + 3.0 * tokens * d * L * 2
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act + _cache_bytes(cfg, shape) + 2.0 * tokens * d * L * 2
+    # decode: with batch*top_k >= n_experts every expert is touched, so the
+    # whole parameter set streams from HBM, not just the active subset
+    n_read = n_act
+    if cfg.n_experts:
+        hits = shape.global_batch * cfg.top_k
+        frac = min(hits / cfg.n_experts, 1.0)
+        n_read = n_act + frac * (n - n_act)
+    return 2.0 * n_read + _cache_bytes(cfg, shape)

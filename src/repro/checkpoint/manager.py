@@ -1,0 +1,179 @@
+"""Versioned, async, elastic checkpointing.
+
+Design (for 1000+ node runs):
+  * atomic: write to <dir>/tmp.<step> then rename to <dir>/step_<step> --
+    a crashed writer never corrupts the latest checkpoint;
+  * async: device->host transfer happens on the caller thread (cheap,
+    overlapped with the next step's compute by XLA), serialization+fsync on
+    a background thread; ``wait()`` joins before the next save or exit;
+  * versioned: keeps the newest `keep` checkpoints, garbage-collects older;
+  * ELASTIC: tensors are stored UNSHARDED (logical arrays) with the pytree
+    structure; ``restore(..., shardings=...)`` re-partitions onto any mesh,
+    so a 2x16x16 run restarts on 16x16 (pod loss) or grows back -- the
+    checkpoint is mesh-independent by construction.  In a real multi-host
+    deployment each host writes its addressable shards (same layout,
+    per-host files); here (single host) the gather is a no-op.
+  * self-describing: a JSON manifest carries step, dtypes, shapes, and a
+    content checksum per tensor for corruption detection.
+
+Storage format: one .npz per checkpoint + manifest.json (offline-friendly,
+no orbax dependency).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep: int = 3, async_write: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------- save
+
+    def save(self, step: int, tree, *, blocking: bool = False):
+        """Snapshot `tree` at `step`.  Returns immediately (async)."""
+        self.wait()
+        leaves, treedef = _flatten(tree)
+        # device -> host (gather across shards); numpy() forces the copy now
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        paths = [str(p) for p in
+                 jax.tree_util.tree_flatten_with_path(tree)[0].__iter__()]
+        keypaths = [jax.tree_util.keystr(kp) for kp, _ in
+                    jax.tree_util.tree_flatten_with_path(tree)[0]]
+
+        def write():
+            try:
+                tmp = self.dir / f"tmp.{step}.{os.getpid()}"
+                tmp.mkdir(exist_ok=True)
+                # npz cannot persist ml_dtypes (bf16 etc.): store raw bits
+                arrs = {}
+                for i, a in enumerate(host_leaves):
+                    if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+                        a = a.view(np.uint16)
+                    arrs[f"t{i}"] = a
+                np.savez(tmp / "tensors.npz", **arrs)
+                manifest = {
+                    "step": step,
+                    "time": time.time(),
+                    "n_tensors": len(host_leaves),
+                    "keypaths": keypaths,
+                    "tensors": [
+                        {"key": f"t{i}", "shape": list(a.shape),
+                         "dtype": str(a.dtype),
+                         "crc": hashlib.md5(np.ascontiguousarray(a).tobytes()
+                                            ).hexdigest()}
+                        for i, a in enumerate(host_leaves)
+                    ],
+                }
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+                final = self.dir / f"step_{step:010d}"
+                if final.exists():
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_write and not blocking:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+            self._raise_if_failed()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint write failed: {e}") from e
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                pass
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like, step: int | None = None, *, shardings=None,
+                verify: bool = True):
+        """Restore into the structure of `tree_like`.
+
+        shardings: optional matching pytree of NamedSharding -- enables
+        elastic restore onto a different mesh than the checkpoint was
+        written from.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "tensors.npz")
+        leaves, treedef = _flatten(tree_like)
+        if len(leaves) != manifest["n_tensors"]:
+            raise ValueError(
+                f"checkpoint has {manifest['n_tensors']} tensors, "
+                f"model expects {len(leaves)}")
+        out = []
+        sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                     else [None] * len(leaves))
+        for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+            a = data[f"t{i}"]
+            meta = manifest["tensors"][i]
+            if meta["dtype"] == "bfloat16" and a.dtype == np.uint16:
+                import ml_dtypes
+                a = a.view(ml_dtypes.bfloat16)
+            if verify:
+                crc = hashlib.md5(np.ascontiguousarray(a).tobytes()).hexdigest()
+                if crc != meta["crc"]:
+                    raise IOError(f"checksum mismatch on tensor {i} "
+                                  f"({manifest['keypaths'][i]})")
+            if tuple(a.shape) != tuple(ref.shape):
+                raise ValueError(
+                    f"shape mismatch on {manifest['keypaths'][i]}: "
+                    f"{a.shape} vs {ref.shape}")
+            if sh is not None:
+                out.append(jax.device_put(a, sh))
+            else:
+                out.append(jnp.asarray(a, dtype=ref.dtype))
+        return jax.tree.unflatten(treedef, out), step

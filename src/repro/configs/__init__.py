@@ -1,0 +1,3 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_config, list_archs
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "get_config", "list_archs"]

@@ -1,0 +1,204 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is a ``ModelConfig`` registered under its id; the
+shape grid (train_4k / prefill_32k / decode_32k / long_500k) is shared by all
+LM-family archs.  ``get_config(arch)`` is the single entry point used by the
+launcher (``--arch <id>``), the dry-run, the smoke tests and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+
+    # attention flavour
+    attn_type: str = "gqa"          # gqa | mla | none
+    qkv_bias: bool = False
+    window: int = 0                 # >0 -> local (sliding window) attention
+    rope_theta: float = 10_000.0
+
+    # MLA (deepseek-style latent attention)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_dense_layers: int = 0         # leading dense layers (DSv3: 3, K2: 1)
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1024
+    moe_dispatch: str = "einsum"    # einsum | scatter
+    ep_over_dp: bool = False        # shard experts over data x model (one
+                                    # expert per chip when E == data*model)
+
+    # SSM (mamba-1)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0            # 0 -> ceil(d_model/16)
+    ssm_chunk: int = 128
+
+    # hybrid block pattern (recurrentgemma): repeated unit + tail
+    block_pattern: tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    d_rnn: int = 0                  # RG-LRU width (0 -> d_model)
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    dec_ratio: int = 4              # dec_len = enc_len // dec_ratio
+
+    # modality frontend stub
+    frontend: str = "none"          # none | patch_stub | frames_stub
+    n_frontend_tokens: int = 0      # vlm: image tokens prepended
+
+    # norms / activations / embeddings
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    act: str = "swiglu"             # swiglu | gelu
+    tie_embeddings: bool = False
+    learned_pos_emb: bool = False   # whisper-style
+
+    # numerics & schedule
+    dtype: str = "bfloat16"
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    attn_schedule: str = "scan"     # scan | unrolled_causal
+    attn_probs_bf16: bool = False   # flash probs tile in bf16 (halves traffic)
+    virtual_head_pad: int = 0       # pad head counts to a multiple for TP
+                                    # (beyond-paper: zero-init pad heads; see
+                                    # EXPERIMENTS.md Perf iter on qwen)
+    remat: str = "layer"            # layer | none | dots
+    seq_parallel: bool = False      # shard layer-boundary activations on
+                                    # seq x model (Megatron-SP style): cuts
+                                    # remat residual memory by the TP degree
+    use_pallas: bool = False        # Pallas kernels (TPU only; XLA ref on CPU)
+
+    # citation / provenance
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.ssm_state and not self.ssm_dt_rank:
+            object.__setattr__(self, "ssm_dt_rank", -(-self.d_model // 16))
+        if self.block_pattern and not self.d_rnn:
+            object.__setattr__(self, "d_rnn", self.d_model)
+
+    # vocab padded for clean vertical (model-axis) sharding; the true vocab is
+    # kept for loss masking.  Padding is 0.05-0.4% for the two odd vocabs.
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, 512)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def heads_padded(self) -> int:
+        if not self.virtual_head_pad:
+            return self.n_heads
+        return _round_up(self.n_heads, self.virtual_head_pad)
+
+    @property
+    def kv_heads_padded(self) -> int:
+        if not self.virtual_head_pad:
+            return self.n_kv_heads
+        return _round_up(self.n_kv_heads, self.virtual_head_pad)
+
+    def n_params(self) -> int:
+        from repro.models.lm import LanguageModel
+        from repro.models.params import count_params
+        return count_params(LanguageModel(self).param_defs())
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: shared + top_k routed)."""
+        if not self.n_experts:
+            return self.n_params()
+        total = self.n_params()
+        n_moe_layers = self.n_layers - self.n_dense_layers
+        per_expert = 3 * self.d_model * self.moe_d_ff
+        inactive = n_moe_layers * (self.n_experts - self.top_k) * per_expert
+        return total - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCHS = (
+    "recurrentgemma_9b",
+    "deepseek_v3_671b",
+    "kimi_k2_1t_a32b",
+    "qwen15_4b",
+    "yi_34b",
+    "deepseek_67b",
+    "minitron_4b",
+    "falcon_mamba_7b",
+    "internvl2_2b",
+    "whisper_medium",
+)
+
+# long_500k requires sub-quadratic sequence mixing; encoder-only would skip
+# decode shapes (none assigned here).  Skips recorded in DESIGN.md §5.
+SUBQUADRATIC = {"recurrentgemma_9b", "falcon_mamba_7b"}
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in SUBQUADRATIC
+    return True
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    cfg: ModelConfig = mod.CONFIG
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE

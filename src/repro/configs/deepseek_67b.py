@@ -1,0 +1,31 @@
+"""deepseek-67b [dense]: llama-arch GQA, deep (95L).
+
+95L d_model=8192 64H (kv=8) d_ff=22016 vocab=102400  [arXiv:2401.02954; hf]
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek_67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=102_400,
+    source="arXiv:2401.02954",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+)

@@ -1,0 +1,51 @@
+"""deepseek-v3-671b [moe]: MLA + 1 shared + 256 routed top-8 experts.
+
+61L d_model=7168 128H d_ff=2048(moe) vocab=129280, 3 leading dense layers
+(dense d_ff=18432).  [arXiv:2412.19437; hf]
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek_v3_671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=18432,              # dense layers' FFN
+    vocab_size=129_280,
+    attn_type="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    rope_head_dim=64,
+    v_head_dim=128,
+    n_experts=256,
+    n_shared_experts=1,
+    top_k=8,
+    moe_d_ff=2048,
+    n_dense_layers=3,
+    source="arXiv:2412.19437",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    q_lora_rank=32,
+    kv_lora_rank=16,
+    rope_head_dim=8,
+    v_head_dim=16,
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=32,
+    n_dense_layers=1,
+    moe_group_size=64,
+)

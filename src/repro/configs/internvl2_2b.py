@@ -1,0 +1,37 @@
+"""internvl2-2b [vlm]: InternViT frontend (stub) + InternLM2 backbone.
+
+24L d_model=2048 16H (kv=8) d_ff=8192 vocab=92553.  The ViT is a STUB per
+the assignment: input_specs() provides precomputed patch embeddings
+(n_frontend_tokens x d_model) prepended to the text sequence.
+[arXiv:2404.16821; hf]
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2_2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92_553,
+    frontend="patch_stub",
+    n_frontend_tokens=256,
+    source="arXiv:2404.16821",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    n_frontend_tokens=8,
+)

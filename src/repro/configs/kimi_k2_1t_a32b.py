@@ -1,0 +1,43 @@
+"""kimi-k2-1t-a32b [moe]: trillion-param MoE, 384 routed top-8, 1 shared.
+
+61L d_model=7168 64H (GQA kv=8, per assignment table) d_ff=2048(moe)
+vocab=163840, 1 leading dense layer.  [arXiv:2501.kimi2; unverified]
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi_k2_1t_a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=112,
+    d_ff=18432,              # dense layer FFN
+    vocab_size=163_840,
+    attn_type="gqa",
+    n_experts=384,
+    n_shared_experts=1,
+    top_k=8,
+    moe_d_ff=2048,
+    n_dense_layers=1,
+    source="arXiv:2501.kimi2",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=32,
+    n_dense_layers=1,
+    moe_group_size=64,
+)

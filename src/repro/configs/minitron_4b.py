@@ -1,0 +1,32 @@
+"""minitron-4b [dense]: pruned nemotron.
+
+32L d_model=3072 24H (kv=8) d_ff=9216 vocab=256000  [arXiv:2407.14679; hf]
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron_4b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=9216,
+    vocab_size=256_000,
+    act="relu2",  # nemotron-family squared-relu MLP
+    source="arXiv:2407.14679",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+)

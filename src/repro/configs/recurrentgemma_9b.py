@@ -1,0 +1,39 @@
+"""recurrentgemma-9b [hybrid]: RG-LRU + local attention, 2:1 pattern.
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000
+[arXiv:2402.19427; unverified]
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma_9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256_000,
+    attn_type="gqa",
+    window=2048,
+    block_pattern=("rec", "rec", "attn"),
+    d_rnn=4096,
+    act="geglu",  # gated-gelu mlp per RG paper
+    source="arXiv:2402.19427",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=6,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    d_rnn=64,
+    vocab_size=512,
+    window=32,
+)

@@ -1,0 +1,42 @@
+"""whisper-medium [audio]: encoder-decoder transformer backbone.
+
+24L(enc) + 24L(dec) d_model=1024 16H (kv=16) d_ff=4096 vocab=51865.
+Conv frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings for the encoder.  LayerNorm + GELU + learned
+positional embeddings, MHA.  [arXiv:2212.04356; unverified]
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper_medium",
+    family="audio",
+    n_layers=24,               # decoder layers
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51_865,
+    is_encoder_decoder=True,
+    dec_ratio=4,
+    frontend="frames_stub",
+    norm="layernorm",
+    act="gelu",
+    learned_pos_emb=True,
+    source="arXiv:2212.04356",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=2,
+    n_enc_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+)

@@ -1,0 +1,31 @@
+"""yi-34b [dense]: llama-arch GQA.
+
+60L d_model=7168 56H (kv=8) d_ff=20480 vocab=64000  [arXiv:2403.04652; hf]
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi_34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64_000,
+    source="arXiv:2403.04652",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=512,
+)

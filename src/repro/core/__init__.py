@@ -1,0 +1,21 @@
+from repro.core.topology import (
+    ContentEvent,
+    Grouping,
+    Processor,
+    Stream,
+    Topology,
+    TopologyBuilder,
+)
+from repro.core.engines import LocalEngine, JitEngine, ShardMapEngine
+
+__all__ = [
+    "ContentEvent",
+    "Grouping",
+    "Processor",
+    "Stream",
+    "Topology",
+    "TopologyBuilder",
+    "LocalEngine",
+    "JitEngine",
+    "ShardMapEngine",
+]

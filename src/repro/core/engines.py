@@ -1,0 +1,215 @@
+"""Pluggable execution engines -- the DSPE-adapter layer of the paper.
+
+The same Topology runs on three engines (the JAX analogue of the paper's
+samoa-Storm / samoa-Flink / samoa-Samza / samoa-Apex adapters):
+
+  LocalEngine     -- pure-Python event loop, one micro-batch at a time,
+                     feedback delivered within the same step until
+                     quiescence.  == the paper's 'local' sequential engine
+                     (split feedback delay D = 0).
+  JitEngine       -- the whole topology step is ONE jitted function;
+                     feedback edges are carried state delivered at the
+                     next step (delay D = 1 engine step).  This reproduces
+                     the asynchronous split-delay of a real DSPE in a
+                     deterministic, measurable way.
+  ShardMapEngine  -- JitEngine + GSPMD: processor state sharded according
+                     to each incoming stream's grouping (KEY -> 'model'
+                     axis, SHUFFLE -> 'data' axis, ALL -> replicated).
+
+Engines only require Processors to be pure; the same user code runs on all
+three (the paper's flexibility goal).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.topology import Grouping, Topology
+
+
+class Engine:
+    def run_stream(self, topology, states, batches):  # pragma: no cover
+        raise NotImplementedError
+
+
+def _init_states(topology: Topology, key):
+    keys = jax.random.split(key, len(topology.processors))
+    return {n: p.init_state(k)
+            for (n, p), k in zip(topology.processors.items(), keys)}
+
+
+class LocalEngine(Engine):
+    """Sequential reference engine (paper: the local execution engine).
+
+    Feedback loops are iterated to quiescence inside each step: split
+    decisions reach the model before the next micro-batch (delay 0).
+    """
+
+    def __init__(self, max_feedback_iters: int = 4):
+        self.max_feedback_iters = max_feedback_iters
+
+    def init(self, topology: Topology, key):
+        return _init_states(topology, key)
+
+    def step(self, topology: Topology, states, source_payload):
+        order = topology.order()
+        inboxes: dict[str, dict] = {n: {} for n in topology.processors}
+        inboxes[topology.entry]["__source__"] = source_payload
+        outputs: dict[str, Any] = {}
+        for _ in range(self.max_feedback_iters):
+            progressed = False
+            for name in order:
+                inbox = inboxes[name]
+                if not inbox:
+                    continue
+                proc = topology.processors[name]
+                states[name], emits = proc.process(states[name], inbox)
+                inboxes[name] = {}
+                progressed = True
+                for stream_name, payload in (emits or {}).items():
+                    if payload is None:
+                        continue
+                    stream = topology.streams.get(stream_name)
+                    if stream is None:
+                        outputs[stream_name] = payload  # task-level sink
+                        continue
+                    sunk = False
+                    for dst, _ in stream.destinations:
+                        inboxes[dst][stream_name] = payload
+                        sunk = True
+                    if not sunk:
+                        outputs[stream_name] = payload
+            if not progressed:
+                break
+        return states, outputs
+
+
+class JitEngine(Engine):
+    """Whole-topology step as one jitted function; feedback edges deliver
+    next step (bounded staleness D=1 -- the deterministic analogue of DSPE
+    queueing delay)."""
+
+    def __init__(self, donate: bool = True):
+        self.donate = donate
+        self._compiled: dict[int, Callable] = {}
+
+    def init(self, topology: Topology, key):
+        states = _init_states(topology, key)
+        return {"states": states, "feedback": None}
+
+    def _make_step(self, topology: Topology):
+        fb_edges = topology.feedback_edges()
+        order = topology.order()
+
+        def step(states, feedback, source_payload):
+            inboxes: dict[str, dict] = {n: {} for n in topology.processors}
+            inboxes[topology.entry]["__source__"] = source_payload
+            # deliver last step's feedback first
+            if feedback:
+                for stream_name, payload in feedback.items():
+                    stream = topology.streams[stream_name]
+                    for dst, _ in stream.destinations:
+                        inboxes[dst][stream_name] = payload
+            outputs: dict[str, Any] = {}
+            new_feedback: dict[str, Any] = {}
+            for name in order:
+                proc = topology.processors[name]
+                states = dict(states)
+                states[name], emits = proc.process(states[name], inboxes[name])
+                for stream_name, payload in (emits or {}).items():
+                    if payload is None:
+                        continue
+                    if stream_name in fb_edges:
+                        new_feedback[stream_name] = payload
+                        continue
+                    stream = topology.streams.get(stream_name)
+                    if stream is None or not stream.destinations:
+                        outputs[stream_name] = payload
+                        continue
+                    for dst, _ in stream.destinations:
+                        inboxes[dst][stream_name] = payload
+            return states, new_feedback, outputs
+
+        return step
+
+    def step(self, topology: Topology, carry, source_payload):
+        key = id(topology)
+        if key not in self._compiled:
+            self._compiled[key] = jax.jit(self._make_step(topology))
+        states, feedback, outputs = self._compiled[key](
+            carry["states"], carry["feedback"], source_payload)
+        return {"states": states, "feedback": feedback}, outputs
+
+    def run_stream(self, topology: Topology, carry, payload_iter):
+        outs = []
+        for payload in payload_iter:
+            carry, out = self.step(topology, carry, payload)
+            outs.append(out)
+        return carry, outs
+
+
+class ShardMapEngine(JitEngine):
+    """JitEngine with GSPMD sharding derived from stream groupings.
+
+    State leaves of processors fed by KEY-grouped streams get their leading
+    axis sharded over 'model' (vertical parallelism); SHUFFLE-fed processor
+    batches shard over 'data'; ALL-grouped streams replicate.  The jitted
+    topology step is constrained accordingly -- XLA inserts the collectives
+    that Storm/Samza would perform as network shuffles.
+    """
+
+    def __init__(self, mesh, donate: bool = True):
+        super().__init__(donate=donate)
+        self.mesh = mesh
+
+    def init(self, topology: Topology, key):
+        carry = super().init(topology, key)
+        carry["states"] = self._shard_states(topology, carry["states"])
+        return carry
+
+    def _grouping_of(self, topology, proc_name) -> Grouping | None:
+        for s in topology.streams.values():
+            for dst, g in s.destinations:
+                if dst == proc_name:
+                    return g
+        return None
+
+    def _shard_states(self, topology, states):
+        out = {}
+        for name, st in states.items():
+            proc = topology.processors[name]
+            hint = proc.state_sharding()
+            g = self._grouping_of(topology, name)
+            if hint is not None:
+                out[name] = jax.tree.map(
+                    lambda x, s: jax.device_put(
+                        x, NamedSharding(self.mesh, s)) if s is not None else x,
+                    st, hint,
+                    is_leaf=lambda v: v is None or isinstance(v, P))
+            elif g is Grouping.KEY:
+                def shard_leaf(x):
+                    if (hasattr(x, "ndim") and x.ndim >= 1
+                            and x.shape[0] % self.mesh.shape["model"] == 0):
+                        spec = P("model", *([None] * (x.ndim - 1)))
+                        return jax.device_put(x, NamedSharding(self.mesh, spec))
+                    return x
+                out[name] = jax.tree.map(shard_leaf, st)
+            else:
+                out[name] = st
+        return out
+
+    def step(self, topology: Topology, carry, source_payload):
+        key = id(topology)
+        if key not in self._compiled:
+            fn = self._make_step(topology)
+            self._compiled[key] = jax.jit(fn)
+        with jax.sharding.use_mesh(self.mesh):
+            states, feedback, outputs = self._compiled[key](
+                carry["states"], carry["feedback"], source_payload)
+        return {"states": states, "feedback": feedback}, outputs

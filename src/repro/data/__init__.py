@@ -1,0 +1,20 @@
+from repro.data.generators import (
+    RandomTreeGenerator,
+    RandomTweetGenerator,
+    WaveformGenerator,
+    ElectricityLikeGenerator,
+    CovtypeLikeGenerator,
+    bin_numeric,
+)
+from repro.data.pipeline import StreamPipeline, TokenStream
+
+__all__ = [
+    "RandomTreeGenerator",
+    "RandomTweetGenerator",
+    "WaveformGenerator",
+    "ElectricityLikeGenerator",
+    "CovtypeLikeGenerator",
+    "bin_numeric",
+    "StreamPipeline",
+    "TokenStream",
+]

@@ -1,0 +1,237 @@
+"""Synthetic stream generators faithful to the paper's evaluation setup.
+
+Section 6.3:
+  * dense  -- attributes drawn under a hidden random decision tree; mixed
+              categorical/numerical ("100-100" = 100 cat + 100 num); binary
+              balanced classes; 1M instances per seed.
+  * sparse -- random tweet generator: bag-of-words of dimensionality
+              100/1k/10k, ~15 words per tweet (Gaussian size), Zipf(z=1.5)
+              word choice, binary class conditioning the Zipf permutation.
+
+Section 7.3 (regression):
+  * waveform    -- 21 waveform attributes + 19 noise, label = waveform index
+                   (used as numeric target like the paper does).
+  * electricity -- household power-consumption-like autoregressive series,
+                   12 attributes.
+  * covtype     -- covtype-like multiclass tabular stream (54 attrs, 7
+                   classes) standing in for the real benchmark (offline env).
+
+All generators are jit-able samplers: gen.sample(key, n) -> (x, y) with
+x float32 in [0, 1] (dense) and y int32 / float32.  ``bin_numeric`` maps
+to histogram bins for the tree learners.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+def bin_numeric(x, n_bins: int):
+    """[0,1] floats -> int bins."""
+    return jnp.clip((x * n_bins).astype(i32), 0, n_bins - 1)
+
+
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RandomTreeGenerator:
+    """Dense generator: hidden random binary decision tree labels instances.
+
+    n_cat categorical (n_vals values) + n_num numerical attributes.
+    """
+    n_cat: int = 100
+    n_num: int = 100
+    n_vals: int = 5
+    n_classes: int = 2
+    depth: int = 8
+    seed: int = 7
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        n_nodes = 2 ** self.depth - 1
+        m = self.n_cat + self.n_num
+        self._attr = jnp.asarray(rng.randint(0, m, n_nodes), i32)
+        self._thresh = jnp.asarray(rng.rand(n_nodes), f32)
+        # leaves get balanced classes
+        leaves = 2 ** self.depth
+        labels = np.tile(np.arange(self.n_classes), leaves // self.n_classes + 1)[:leaves]
+        rng.shuffle(labels)
+        self._leaf_label = jnp.asarray(labels, i32)
+
+    @property
+    def n_attrs(self):
+        return self.n_cat + self.n_num
+
+    def sample(self, key, n: int):
+        kx, kc = jax.random.split(key)
+        x_num = jax.random.uniform(kx, (n, self.n_num))
+        x_cat = (jax.random.randint(kc, (n, self.n_cat), 0, self.n_vals)
+                 .astype(f32) / max(self.n_vals - 1, 1))
+        x = jnp.concatenate([x_cat, x_num], axis=1)
+
+        def descend(i, node):
+            a = self._attr[node]
+            go_right = x[:, a][jnp.arange(n)] > self._thresh[node]
+            return 2 * node + 1 + go_right.astype(i32)
+
+        node = jnp.zeros((n,), i32)
+        for _ in range(self.depth):
+            a = self._attr[node]
+            v = jnp.take_along_axis(x, a[:, None], axis=1)[:, 0]
+            node = 2 * node + 1 + (v > self._thresh[node]).astype(i32)
+        leaf = node - (2 ** self.depth - 1)
+        y = self._leaf_label[leaf]
+        return x, y
+
+
+@dataclasses.dataclass
+class RandomTweetGenerator:
+    """Sparse generator: Zipf(z) bag-of-words, ~15 words/tweet, binary class
+    permuting the Zipf ranking (class-conditional word distribution)."""
+    vocab: int = 1000
+    avg_words: float = 15.0
+    zipf_z: float = 1.5
+    seed: int = 7
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)
+        p = ranks ** (-self.zipf_z)
+        p /= p.sum()
+        self._p0 = jnp.asarray(p, f32)
+        perm = rng.permutation(self.vocab)
+        self._p1 = jnp.asarray(p[perm], f32)
+
+    @property
+    def n_attrs(self):
+        return self.vocab
+
+    @property
+    def n_classes(self):
+        return 2
+
+    def sample(self, key, n: int):
+        kc, kw, kl = jax.random.split(key, 3)
+        y = jax.random.bernoulli(kc, 0.5, (n,)).astype(i32)
+        n_words = jnp.clip(
+            (self.avg_words + 4.0 * jax.random.normal(kl, (n,))).astype(i32),
+            1, 30)
+        max_w = 30
+        logits0 = jnp.log(self._p0)
+        logits1 = jnp.log(self._p1)
+        logits = jnp.where(y[:, None] == 0, logits0, logits1)
+        words = jax.random.categorical(kw, logits[:, None, :], axis=-1,
+                                       shape=(n, max_w))
+        wmask = jnp.arange(max_w)[None, :] < n_words[:, None]
+        x = jnp.zeros((n, self.vocab), f32)
+        oh = jax.nn.one_hot(words, self.vocab) * wmask[..., None]
+        x = jnp.clip(oh.sum(1), 0, 1)
+        return x, y
+
+
+@dataclasses.dataclass
+class WaveformGenerator:
+    """3 base waveforms, 21 signal + 19 noise attrs; label = waveform id."""
+    seed: int = 7
+    n_attrs_signal: int = 21
+    n_noise: int = 19
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        t = np.arange(self.n_attrs_signal)
+        w = np.stack([
+            np.maximum(6 - np.abs(t - 7), 0),
+            np.maximum(6 - np.abs(t - 13), 0),
+            np.maximum(6 - np.abs(t - 3), 0) + np.maximum(6 - np.abs(t - 17), 0),
+        ]) / 6.0
+        self._wave = jnp.asarray(w, f32)
+
+    @property
+    def n_attrs(self):
+        return self.n_attrs_signal + self.n_noise
+
+    @property
+    def n_classes(self):
+        return 3
+
+    def sample(self, key, n: int):
+        kc, ku, kn, kz = jax.random.split(key, 4)
+        y = jax.random.randint(kc, (n,), 0, 3)
+        u = jax.random.uniform(ku, (n, 1))
+        base = (u * self._wave[y] + (1 - u) * self._wave[(y + 1) % 3])
+        sig = base + 0.1 * jax.random.normal(kn, (n, self.n_attrs_signal))
+        noise = jax.random.uniform(kz, (n, self.n_noise))
+        x = jnp.concatenate([jnp.clip(sig, 0, 1), noise], 1)
+        # regression target (paper uses waveform index as numeric label)
+        return x, y
+
+    def sample_regression(self, key, n: int):
+        x, y = self.sample(key, n)
+        return x, y.astype(f32)
+
+
+@dataclasses.dataclass
+class ElectricityLikeGenerator:
+    """Autoregressive household-consumption-like series: 12 attrs, numeric
+    target (watt-hours); classification variant thresholds the target."""
+    seed: int = 7
+    n_attrs: int = 12
+
+    @property
+    def n_classes(self):
+        return 2
+
+    def sample(self, key, n: int):
+        ks, kn, kd = jax.random.split(key, 3)
+        t = jax.random.uniform(ks, (n,)) * 2 * jnp.pi
+        daily = 0.5 + 0.3 * jnp.sin(t) + 0.1 * jnp.sin(3 * t)
+        feats = [daily[:, None]]
+        carry = daily
+        noise = jax.random.normal(kn, (n, self.n_attrs - 1)) * 0.05
+        for j in range(self.n_attrs - 1):
+            carry = jnp.clip(0.8 * carry + 0.2 * noise[:, j] + 0.05, 0, 1)
+            feats.append(carry[:, None])
+        x = jnp.concatenate(feats, 1)
+        target = jnp.clip(0.6 * daily + 0.4 * x[:, -1]
+                          + 0.05 * jax.random.normal(kd, (n,)), 0, 1)
+        return x, target
+
+    def sample_classification(self, key, n: int):
+        x, target = self.sample(key, n)
+        return x, (target > 0.5).astype(i32)
+
+
+@dataclasses.dataclass
+class CovtypeLikeGenerator:
+    """Covtype-like tabular stream: 54 attrs (10 numeric + 44 binary),
+    7 classes from a hidden piecewise rule (stands in for covtypeNorm)."""
+    seed: int = 7
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        self._w = jnp.asarray(rng.randn(54, 7) * 0.7, f32)
+        self._b = jnp.asarray(rng.randn(7) * 0.1, f32)
+
+    @property
+    def n_attrs(self):
+        return 54
+
+    @property
+    def n_classes(self):
+        return 7
+
+    def sample(self, key, n: int):
+        kx, kb, ke = jax.random.split(key, 3)
+        xnum = jax.random.uniform(kx, (n, 10))
+        xbin = jax.random.bernoulli(kb, 0.15, (n, 44)).astype(f32)
+        x = jnp.concatenate([xnum, xbin], 1)
+        logits = x @ self._w + self._b + 0.5 * jax.random.normal(ke, (n, 7))
+        y = jnp.argmax(logits, -1)
+        return x, y

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    ShardingPolicy,
+    dp_axes,
+    make_policy,
+    param_spec,
+    shardings_for,
+)
+
+__all__ = [
+    "ShardingPolicy",
+    "dp_axes",
+    "make_policy",
+    "param_spec",
+    "shardings_for",
+]

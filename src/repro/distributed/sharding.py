@@ -1,0 +1,280 @@
+"""Sharding policy: SAMOA groupings mapped onto GSPMD PartitionSpecs.
+
+The paper distributes work with three *groupings*:
+
+  * key grouping      -- route by key; in tensor form this is sharding an
+                         axis of the state across workers.  VHT key-groups
+                         the (leaf, attribute) statistics; the LM zoo
+                         key-groups attention heads / FFN columns / experts.
+                         All map to the ``model`` mesh axis here.
+  * shuffle grouping  -- spread instances uniformly; this is batch sharding
+                         over the ``data`` (and ``pod``) mesh axes.
+  * all grouping      -- broadcast; replication + jax.lax collectives.
+
+``param_spec`` below is the single place where a logical-axis-annotated
+tensor is assigned mesh axes.  It implements two passes:
+
+  1. *vertical parallelism* (the paper's technique): model-parallel axes
+     (vocab / heads / ff / experts / kv_seq ...) go to ``model`` when the
+     dimension is divisible by the axis size;
+  2. *single-copy state* (the paper's memory argument, ==FSDP/ZeRO): the
+     largest remaining eligible axis is sharded over the data axes so no
+     worker holds a full replica -- the same argument the paper makes for
+     why vertical statistics beat the ``sharding`` baseline's p-times
+     memory blow-up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Logical axes handled by the vertical (tensor/model) parallel pass, tried in
+# order.  Only applied when the dimension size is divisible by the mesh axis.
+TP_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "moe_ff": "model",
+    "experts": "model",
+    "experts_dp": ("data", "model"),  # expert-parallel over BOTH axes (one
+                                      # expert per chip when E == data*model;
+                                      # kills the FSDP weight gather at decode)
+    "kv_seq": "model",      # decode-time KV cache sequence sharding
+    "attr": "model",        # VHT: attribute axis == key grouping (leaf,attr)
+    "rules": "model",       # AMRules: rule-id axis -> learner processors
+    "d_inner": "model",     # SSM inner channels
+    "d_rnn": "model",       # RG-LRU width
+}
+
+# Fallback vertical rules, tried only if no axis got a model assignment in the
+# first pass (e.g. head counts not divisible by the mesh: qwen 20H, yi 56H).
+TP_FALLBACK: dict[str, str] = {
+    "head_dim": "model",
+    "embed": "model",
+}
+
+# Axes eligible to absorb the FSDP (data-axes) shard of parameters.
+FSDP_OK = ("embed", "ff", "moe_ff", "d_inner", "d_rnn", "vocab", "heads",
+           "q_lora", "kv_lora", "attr", "rules")
+
+# Axes that are *never* sharded.
+NEVER = ("layers", "bins", "classes", "state", "conv", "pattern")
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel mesh axes: ('pod','data') on multi-pod, ('data',) else."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# --- active-mesh context: lets model code emit sharding constraints without
+# --- threading the mesh through every call (no-op when no mesh is active)
+import contextlib
+import contextvars
+
+_ACTIVE_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_active_mesh", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    """Activate `mesh` for constrain() AND as jax's resource env."""
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE_MESH.get()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def param_spec(
+    shape: Sequence[int],
+    axes: Sequence[str | None],
+    mesh: Mesh,
+    *,
+    fsdp: bool = True,
+    tp: bool = True,
+) -> P:
+    """Assign mesh axes to a parameter from its logical-axis annotation."""
+    assert len(shape) == len(axes), (shape, axes)
+    assign: list[Any] = [None] * len(shape)
+    used: set[str] = set()
+
+    # batch axes (activations / caches): shuffle grouping over data(+pod)
+    dp = dp_axes(mesh)
+    dsize = _axis_size(mesh, dp)
+    for i, (d, a) in enumerate(zip(shape, axes)):
+        if (a == "batch" and dp and dsize > 1 and d % dsize == 0
+                and not (set(dp) & used)):
+            assign[i] = dp if len(dp) > 1 else dp[0]
+            used.update(dp)
+
+    if tp and "model" in mesh.axis_names:
+        msize = mesh.shape["model"]
+        for i, (d, a) in enumerate(zip(shape, axes)):
+            rule = TP_RULES.get(a or "")
+            if isinstance(rule, tuple):
+                parts = tuple(r for r in rule if r in mesh.axis_names)
+                size = math.prod(mesh.shape[r] for r in parts)
+                if parts and not (set(parts) & used) and d % size == 0:
+                    assign[i] = parts if len(parts) > 1 else parts[0]
+                    used.update(parts)
+                continue
+            if rule and rule not in used and d % msize == 0:
+                assign[i] = rule
+                used.add(rule)
+        if "model" not in used:
+            for i, (d, a) in enumerate(zip(shape, axes)):
+                rule = TP_FALLBACK.get(a or "")
+                if rule and d % msize == 0:
+                    assign[i] = rule
+                    used.add(rule)
+                    break
+
+    if fsdp:
+        dp = dp_axes(mesh)
+        dsize = _axis_size(mesh, dp)
+        if dp and dsize > 1 and not (set(dp) & used):
+            order = sorted(range(len(shape)), key=lambda i: -shape[i])
+            for i in order:
+                if (
+                    assign[i] is None
+                    and (axes[i] or "") in FSDP_OK
+                    and shape[i] % dsize == 0
+                ):
+                    assign[i] = dp if len(dp) > 1 else dp[0]
+                    break
+    return P(*assign)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Bundles a mesh with grouping->PartitionSpec mapping decisions."""
+
+    mesh: Mesh
+    fsdp: bool = True
+    tp: bool = True
+
+    # ---- the three SAMOA groupings -------------------------------------
+    def shuffle(self, *trailing: Any) -> P:
+        """Shuffle grouping: batch axis over data(+pod)."""
+        dp = dp_axes(self.mesh)
+        lead = dp if len(dp) > 1 else (dp[0] if dp else None)
+        return P(lead, *trailing)
+
+    def key_group(self, ndim: int, axis: int) -> P:
+        """Key grouping: shard dimension `axis` over the model mesh axis."""
+        spec: list[Any] = [None] * ndim
+        spec[axis] = "model"
+        return P(*spec)
+
+    def all_group(self, ndim: int) -> P:
+        """All grouping: full replication."""
+        return P(*([None] * ndim))
+
+    # ---- parameter / activation helpers --------------------------------
+    def param(self, shape, axes) -> NamedSharding:
+        return NamedSharding(
+            self.mesh, param_spec(shape, axes, self.mesh, fsdp=self.fsdp, tp=self.tp)
+        )
+
+    def spec(self, shape, axes) -> P:
+        return param_spec(shape, axes, self.mesh, fsdp=self.fsdp, tp=self.tp)
+
+    def activation(self, *logical: str | None) -> P:
+        """Activations: batch over data(+pod); other axes replicated unless
+        explicitly model-sharded (e.g. 'heads')."""
+        out: list[Any] = []
+        for name in logical:
+            if name == "batch":
+                dp = dp_axes(self.mesh)
+                out.append(dp if len(dp) > 1 else (dp[0] if dp else None))
+            elif name in TP_RULES:
+                out.append("model")
+            else:
+                out.append(None)
+        return P(*out)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_policy(mesh: Mesh, *, fsdp: bool = True, tp: bool = True) -> ShardingPolicy:
+    return ShardingPolicy(mesh=mesh, fsdp=fsdp, tp=tp)
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint from logical axis names, using the ambient
+    mesh (``with mesh:`` / ``jax.sharding.use_mesh``).  No-op when no mesh
+    is active (single-device tests) or when a dim doesn't divide its axis.
+
+    logical names: "batch" -> data(+pod) axes, "model"/"experts"/"heads"/
+    "ff"/"vocab"/"kv_seq" -> model axis, None -> unsharded.
+
+    GSPMD propagates shardings poorly through scan bodies and reshapes;
+    pinning activations at block boundaries is what keeps the batch axis
+    partitioned instead of silently replicating the whole computation
+    (a 16x FLOP/memory regression we hit in the dry-run -- see
+    EXPERIMENTS.md section Perf).
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    spec: list[Any] = []
+    for dim, name in zip(x.shape, logical):
+        if name == "batch":
+            dp = tuple(a for a in ("pod", "data") if a in names)
+            size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+            if dp and size > 1 and dim % size == 0:
+                spec.append(dp if len(dp) > 1 else dp[0])
+            else:
+                spec.append(None)
+        elif name in TP_RULES or name == "model":
+            rule = TP_RULES.get(name, "model")
+            if isinstance(rule, tuple):
+                parts = tuple(r for r in rule if r in names)
+                size = math.prod(mesh.shape[r] for r in parts) if parts else 1
+                if parts and dim % size == 0:
+                    spec.append(parts if len(parts) > 1 else parts[0])
+                else:
+                    spec.append(None)
+            elif "model" in names and dim % mesh.shape["model"] == 0:
+                spec.append("model")
+            else:
+                spec.append(None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shardings_for(axes_tree, mesh: Mesh, *, fsdp: bool = True, tp: bool = True):
+    """Map a pytree of (shape, logical-axes) leaves to NamedShardings.
+
+    Leaves are ``AxisAnnotation`` (see models.params) or plain tuples of axis
+    names paired with a shape-bearing twin tree via jax.eval_shape upstream.
+    """
+    def one(leaf):
+        shape, axes = leaf
+        return NamedSharding(mesh, param_spec(shape, axes, mesh, fsdp=fsdp, tp=tp))
+
+    return jax.tree.map(one, axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and isinstance(x[0], tuple))

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: full-materialization causal attention."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: [B,S,H,hd]; k/v: [B,T,H,hd] (kv heads already expanded).
+    Returns [B,S,H,hd] in q.dtype; softmax in fp32."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the mamba-1 selective scan (one chunk)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def selective_scan_ref(dt, x, Bm, Cm, A, h0):
+    """dt/x: [B,c,dI]; Bm/Cm: [B,c,N]; A: [dI,N]; h0: [B,dI,N].
+    Returns (y [B,c,dI], hT [B,dI,N]).  All math in fp32."""
+    dt, x, Bm, Cm, h0 = (a.astype(f32) for a in (dt, x, Bm, Cm, h0))
+    A = A.astype(f32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp                     # [B,dI],[B,dI],[B,N],[B,N]
+        dA = jnp.exp(dt_t[..., None] * A)             # [B,dI,N]
+        dBx = dt_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        h = dA * h + dBx
+        y = jnp.einsum("ben,bn->be", h, c_t)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (dt.swapaxes(0, 1), x.swapaxes(0, 1),
+         Bm.swapaxes(0, 1), Cm.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT

@@ -1,0 +1,3 @@
+from repro.kernels.split_gain.ops import split_gain
+
+__all__ = ["split_gain"]

@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the split-gain kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.split_gain.kernel import split_gain_pallas
+from repro.kernels.split_gain.ref import split_gain_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def split_gain(stats, *, use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        return split_gain_ref(stats)
+    return split_gain_pallas(stats, interpret=interpret)

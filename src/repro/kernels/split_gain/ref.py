@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the split-gain reduction (mirrors htree.split_gains)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _entropy(counts, axis=-1):
+    tot = counts.sum(axis, keepdims=True)
+    p = counts / jnp.maximum(tot, 1e-12)
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-12)), 0.0),
+                 axis)
+    return jnp.where(tot[..., 0] > 0, h, 0.0)
+
+
+def split_gain_ref(stats):
+    """stats: [N, m, bins, C] -> gains [N, m, bins]."""
+    cum = jnp.cumsum(stats, axis=2)
+    total = cum[:, :, -1:, :]
+    left = cum
+    right = total - left
+    nl = left.sum(-1)
+    nr = right.sum(-1)
+    n = jnp.maximum(nl + nr, 1e-12)
+    h_tot = _entropy(total[:, :, 0, :])
+    hl = _entropy(left)
+    hr = _entropy(right)
+    gain = h_tot[..., None] - (nl / n * hl + nr / n * hr)
+    valid = (nl > 0) & (nr > 0)
+    return jnp.where(valid, gain, NEG)

@@ -1,0 +1,3 @@
+from repro.kernels.vht_stats.ops import stats_update
+
+__all__ = ["stats_update"]

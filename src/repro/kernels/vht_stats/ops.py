@@ -1,0 +1,24 @@
+"""Public jit'd wrapper for the VHT statistics-update kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.vht_stats.kernel import stats_update_pallas
+from repro.kernels.vht_stats.ref import stats_update_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def stats_update(stats, leaf, xbin, y, w, *, use_pallas: bool = True,
+                 interpret: bool = True):
+    """Accumulate VHT sufficient statistics for a micro-batch.
+
+    interpret=True executes the Pallas kernel body on CPU (this container);
+    on TPU pass interpret=False.  use_pallas=False falls back to the
+    scatter-add oracle.
+    """
+    if not use_pallas:
+        return stats_update_ref(stats, leaf, xbin, y, w)
+    return stats_update_pallas(stats, leaf, xbin, y, w, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the VHT statistics update."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stats_update_ref(stats, leaf, xbin, y, w):
+    """stats: [N, m, bins, C] f32; leaf: [B] i32; xbin: [B, m] i32;
+    y: [B] i32; w: [B] f32.  Returns updated stats."""
+    n_bins = stats.shape[2]
+    n_classes = stats.shape[3]
+    binoh = jax.nn.one_hot(xbin, n_bins, dtype=jnp.float32)        # [B,m,bins]
+    clsoh = jax.nn.one_hot(y, n_classes, dtype=jnp.float32) * w[:, None]
+    val = binoh[..., None] * clsoh[:, None, None, :]               # [B,m,bins,C]
+    return stats.at[leaf].add(val)

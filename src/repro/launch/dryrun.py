@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi_34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun
+
+Each cell emits one JSON record: memory_analysis, cost_analysis, collective
+census, roofline terms.  Failures (sharding mismatch, OOM at compile,
+unsupported collective) are bugs -- the process exits non-zero.
+
+(no ``from __future__`` here: the XLA_FLAGS lines must stay first.)
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis import roofline as rl
+from repro.configs.base import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import make_serve_step, make_train_step, make_prefill_step, opt_state_specs
+from repro.optim.adamw import AdamW
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, fsdp: bool = True,
+             overrides: dict | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    from repro.distributed.sharding import mesh_context
+
+    specs = input_specs(cfg, shape, mesh, fsdp=fsdp)
+    t0 = time.time()
+    with mesh_context(mesh):
+        if shape.kind == "train":
+            opt = AdamW(lr=3e-4)
+            step = make_train_step(cfg, opt)
+            opt_specs = opt_state_specs(specs["params"], opt)
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+            lowered = jitted.lower(specs["params"], opt_specs, specs["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step)
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        else:
+            step = make_serve_step(cfg)
+            jitted = jax.jit(step, donate_argnums=(1,))
+            lowered = jitted.lower(specs["params"], specs["cache"],
+                                   specs["token"], specs["index"])
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    roof = rl.analyze(
+        compiled, hlo_text, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=chips, model_flops=rl.model_flops_estimate(cfg, shape),
+        model_bytes=rl.model_bytes_estimate(cfg, shape),
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+            "fits_16g_hbm": (mem.argument_size_in_bytes
+                             + mem.temp_size_in_bytes) < 16e9,
+        },
+        "hlo_flops_global": roof.hlo_flops,
+        "hlo_bytes_global": roof.hlo_bytes,
+        "collective_bytes_per_chip": roof.coll_bytes,
+        "dcn_bytes_per_chip": roof.dcn_bytes,
+        "collective_counts": roof.coll_counts,
+        "model_flops": roof.model_flops,
+        "roofline": {
+            "t_compute_ms": roof.t_compute * 1e3,
+            "t_memory_ms": roof.t_memory * 1e3,
+            "t_collective_ms": roof.t_collective * 1e3,
+            "bottleneck": roof.bottleneck,
+            "useful_flop_ratio": roof.useful_ratio,
+            "roofline_fraction": roof.roofline_fraction,
+        },
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"compile={t_compile:.0f}s "
+              f"peak/dev={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+              f"bottleneck={roof.bottleneck} "
+              f"roofline_frac={roof.roofline_fraction:.3f}", flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (repeatable)")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            if not shape_applicable(arch, shape):
+                continue
+            for mp in pods:
+                cells.append((arch, shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}.{shape}.{'512' if mp else '256'}"
+        try:
+            rec = run_cell(arch, shape, multi_pod=mp, fsdp=not args.no_fsdp,
+                           overrides=overrides)
+            (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+        except Exception:
+            failures += 1
+            print(f"[dryrun] FAIL {tag}", flush=True)
+            traceback.print_exc()
+    print(f"[dryrun] done: {len(cells) - failures}/{len(cells)} cells ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

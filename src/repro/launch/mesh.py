@@ -1,0 +1,31 @@
+"""Production mesh factory.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state -- required because the dry-run must set
+XLA_FLAGS before the first jax initialization, while smoke tests and
+benchmarks must see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi-pod = 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Elastic mesh factory: any (pods, data, model) factorization of the
+    currently visible devices (used by restart-after-failure paths)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Single-host mesh over whatever devices exist (tests/examples)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill + decode loop with KV caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen15_4b --smoke \
+      --batch 4 --prompt-len 64 --gen-len 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.distributed.sharding import mesh_context
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.steps import make_serve_step
+from repro.models.lm import LanguageModel
+from repro.models.params import init_params
+
+
+def prefill_into_cache(model, params, tokens, cache):
+    """Sequential prefill through decode steps (correct for every family;
+    the chunked prefill kernel path is exercised by prefill_32k dry-runs)."""
+    cfg = model.cfg
+    B, S = tokens.shape
+    step = jax.jit(model.decode_step)
+    logits = None
+    for i in range(S):
+        logits, cache = step(params, cache, tokens[:, i: i + 1], jnp.int32(i))
+    return logits, cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = LanguageModel(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh())
+    with mesh_context(mesh):
+        key = jax.random.PRNGKey(0)
+        params = init_params(model.param_defs(), key)
+        total = args.prompt_len + args.gen_len
+        cache = init_params(model.cache_defs(args.batch, total), key)
+        if cfg.is_encoder_decoder:
+            frames = jax.random.normal(
+                key, (args.batch, total, cfg.d_model), jnp.bfloat16) * 0.02
+            cache = jax.jit(model.fill_cross_cache)(params, frames, cache)
+        prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                    cfg.vocab_size)
+        t0 = time.perf_counter()
+        logits, cache = prefill_into_cache(model, params, prompt, cache)
+        t_prefill = time.perf_counter() - t0
+
+        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out = [tok]
+        t0 = time.perf_counter()
+        for i in range(args.gen_len - 1):
+            tok, cache = serve(params, cache, tok, jnp.int32(args.prompt_len + i))
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+        gen = jnp.concatenate(out, 1)
+        tps = args.batch * (args.gen_len - 1) / max(t_decode, 1e-9)
+        print(f"[serve] {cfg.name}: prefill {args.prompt_len} tok in "
+              f"{t_prefill:.2f}s; decode {tps:.1f} tok/s; "
+              f"sample={gen[0,:8].tolist()}", flush=True)
+        return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape, mesh)`` mirrors the shannon/kernels pattern: each
+stand-in is weak-type-correct, carries its NamedSharding, and is fed directly
+to ``jax.jit(step).lower(...)`` by the dry-run.  ``make_batch`` materializes
+small real batches for smoke tests with the same structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import dp_axes
+from repro.models.lm import LanguageModel
+from repro.models.params import abstract_with_sharding, abstract_params
+
+
+def _dp(mesh):
+    dp = dp_axes(mesh)
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
+def _dp_for(B: int, mesh):
+    """Data-parallel axes only when the batch divides them (long_500k: B=1)."""
+    dp = dp_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if not dp or B % size != 0:
+        return None
+    return dp if len(dp) > 1 else dp[0]
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Training/prefill batch stand-ins."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_for(B, mesh)
+    out = {}
+    if cfg.frontend == "patch_stub":
+        nf = cfg.n_frontend_tokens
+        out["tokens"] = _sds((B, S - nf), jnp.int32, mesh, P(dp, None))
+        out["patch_embeds"] = _sds((B, nf, cfg.d_model), jnp.bfloat16, mesh,
+                                   P(dp, None, None))
+    elif cfg.is_encoder_decoder:
+        out["tokens"] = _sds((B, S // cfg.dec_ratio), jnp.int32, mesh, P(dp, None))
+        out["frame_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                                   P(dp, None, None))
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, P(dp, None))
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *, fsdp_cache=False):
+    """Decode-step stand-ins: one new token against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_for(B, mesh)
+    model = LanguageModel(cfg)
+    cache_defs = model.cache_defs(B, S)
+    cache = abstract_with_sharding(cache_defs, mesh, fsdp=False, tp=True)
+    token = _sds((B, 1), jnp.int32, mesh, P(dp, None))
+    index = _sds((), jnp.int32, mesh, P())
+    return {"token": token, "index": index, "cache": cache}
+
+
+def param_specs_abstract(cfg: ModelConfig, mesh, *, fsdp=True):
+    model = LanguageModel(cfg)
+    return abstract_with_sharding(model.param_defs(), mesh, fsdp=fsdp, tp=True)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, *, fsdp=True):
+    """All inputs for the step dictated by shape.kind."""
+    if shape.kind == "train":
+        return {"params": param_specs_abstract(cfg, mesh, fsdp=fsdp),
+                "batch": batch_specs(cfg, shape, mesh)}
+    if shape.kind == "prefill":
+        return {"params": param_specs_abstract(cfg, mesh, fsdp=fsdp),
+                "batch": batch_specs(cfg, shape, mesh)}
+    return {"params": param_specs_abstract(cfg, mesh, fsdp=fsdp),
+            **decode_specs(cfg, shape, mesh)}
+
+
+# ----------------------------- concrete batches (smoke tests) ---------------
+
+def make_batch(cfg: ModelConfig, B: int, S: int, key, kind="train"):
+    kt, ke = jax.random.split(key)
+    if kind in ("train", "prefill"):
+        if cfg.frontend == "patch_stub":
+            nf = cfg.n_frontend_tokens
+            return {
+                "tokens": jax.random.randint(kt, (B, S - nf), 0, cfg.vocab_size),
+                "patch_embeds": jax.random.normal(ke, (B, nf, cfg.d_model),
+                                                  jnp.bfloat16) * 0.02,
+            }
+        if cfg.is_encoder_decoder:
+            return {
+                "tokens": jax.random.randint(kt, (B, max(S // cfg.dec_ratio, 4)),
+                                             0, cfg.vocab_size),
+                "frame_embeds": jax.random.normal(ke, (B, S, cfg.d_model),
+                                                  jnp.bfloat16) * 0.02,
+            }
+        return {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size)}
+    raise ValueError(kind)

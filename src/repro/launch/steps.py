@@ -1,0 +1,79 @@
+"""train_step / prefill_step / serve_step builders (pjit-able, AOT-friendly).
+
+Each builder returns a pure function suitable for
+``jax.jit(fn, donate_argnums=...).lower(**input_specs(...)).compile()`` --
+the multi-pod dry-run path -- and for direct execution in tests/examples.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import LanguageModel
+from repro.optim.adamw import AdamW
+
+
+def make_train_step(cfg, optimizer: AdamW):
+    model = LanguageModel(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": loss}
+
+    return train_step
+
+
+def make_loss_fn(cfg):
+    model = LanguageModel(cfg)
+    return model.loss
+
+
+def make_prefill_step(cfg):
+    """Full-sequence forward returning last-position logits (serving TTFT)."""
+    model = LanguageModel(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.forward(
+            params, batch["tokens"],
+            frontend_embeds=batch.get("patch_embeds"),
+            enc_embeds=batch.get("frame_embeds"),
+        )
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg, *, greedy=True):
+    """One decode step: new token + updated KV/state caches."""
+    model = LanguageModel(cfg)
+
+    def serve_step(params, cache, token, index):
+        logits, new_cache = model.decode_step(params, cache, token, index)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    return serve_step
+
+
+def opt_state_specs(param_abstract, optimizer: AdamW):
+    """Abstract optimizer state with shardings mirroring the params.
+
+    Moments/master share the parameter's sharding (ZeRO: state lives with
+    the FSDP shard); the step counter is replicated.
+    """
+    def like(p, dtype):
+        return jax.ShapeDtypeStruct(p.shape, dtype, sharding=p.sharding)
+
+    state = {
+        "m": jax.tree.map(lambda p: like(p, jnp.float32), param_abstract),
+        "v": jax.tree.map(lambda p: like(p, jnp.float32), param_abstract),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if optimizer.master_fp32:
+        state["master"] = jax.tree.map(lambda p: like(p, jnp.float32),
+                                       param_abstract)
+    return state

@@ -1,0 +1,7 @@
+from repro.ml.htree import TreeConfig, init_tree, route, update_stats, split_gains
+from repro.ml.vht import VHT, VHTConfig, ShardingEnsemble
+
+__all__ = [
+    "TreeConfig", "init_tree", "route", "update_stats", "split_gains",
+    "VHT", "VHTConfig", "ShardingEnsemble",
+]

@@ -1,0 +1,481 @@
+"""Distributed Adaptive Model Rules (paper section 7): MAMR / VAMR / HAMR.
+
+Rule model (tensorized, capacity-bounded):
+  * predicates: (attr, op, threshold-bin) triples, up to F per rule;
+  * heads: adaptive target mean over covered instances;
+  * per-rule expansion statistics: target count/sum/sumsq per (attr, bin)
+    -- the VAMR learner state, key-grouped by RULE ID ('rules' axis ->
+    'model' mesh axis);
+  * default rule: covers the rest; expanding it creates a new rule
+    (centralized default-rule learner in HAMR).
+
+Expansion: standard-deviation reduction (SDR) with the Hoeffding bound on
+the ratio of the two best SDRs (ratio + eps < 1, or eps < tau tie-break).
+Change detection: Page-Hinkley on each rule's absolute error evicts drifted
+rules.  Ordered-rules mode (the paper's focus): first covering rule
+predicts and trains.
+
+Parallelism:
+  MAMR -- sequential reference (the MOA baseline).
+  VAMR -- aggregator holds thin bodies/heads; statistics sharded by rule id;
+          expansion feedback delayed `delay` steps (DSPE queue staleness).
+  HAMR -- `replicas` aggregator copies each process 1/replicas of the batch
+          (horizontal parallelism) + one centralized default-rule learner;
+          new rules are broadcast with the same delay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+i32 = jnp.int32
+BIG = 1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class RulesConfig:
+    n_attrs: int
+    n_bins: int = 8
+    max_rules: int = 64
+    max_feats: int = 8
+    n_min: int = 200          # expansion grace period
+    delta: float = 1e-7
+    tau: float = 0.05
+    ph_lambda: float = 35.0   # Page-Hinkley threshold
+    ph_alpha: float = 0.005
+    delay: int = 0            # expansion feedback staleness (VAMR/HAMR)
+    ordered: bool = True
+
+    @property
+    def eps_n(self):
+        return math.log(1.0 / self.delta) / 2.0
+
+
+def init_rules(rc: RulesConfig):
+    R, F, m, nb = rc.max_rules, rc.max_feats, rc.n_attrs, rc.n_bins
+    def stats():
+        return {
+            "cnt": jnp.zeros((R, m, nb), f32),
+            "sum": jnp.zeros((R, m, nb), f32),
+            "sq": jnp.zeros((R, m, nb), f32),
+        }
+    return {
+        "active": jnp.zeros((R,), bool).at[0].set(False),
+        "pred_attr": jnp.zeros((R, F), i32),
+        "pred_op": jnp.zeros((R, F), i32),       # 0: <= thr, 1: > thr
+        "pred_bin": jnp.zeros((R, F), i32),
+        "pred_valid": jnp.zeros((R, F), bool),
+        "head_n": jnp.zeros((R,), f32),
+        "head_sum": jnp.zeros((R,), f32),
+        "since": jnp.zeros((R,), f32),
+        "stats": stats(),
+        # default rule
+        "d_stats": jax.tree.map(lambda x: x[0], stats()),
+        "d_n": jnp.zeros((), f32),
+        "d_sum": jnp.zeros((), f32),
+        "d_since": jnp.zeros((), f32),
+        # Page-Hinkley per rule
+        "ph_m": jnp.zeros((R,), f32),
+        "ph_min": jnp.zeros((R,), f32),
+        "ph_err": jnp.zeros((R,), f32),
+        "n_rules": jnp.zeros((), i32),
+        "n_created": jnp.zeros((), i32),
+        "n_removed": jnp.zeros((), i32),
+        "n_feats": jnp.zeros((), i32),
+        # delayed expansion feedback buffers
+        "pend_rule_valid": jnp.zeros((R,), bool),
+        "pend_attr": jnp.zeros((R,), i32),
+        "pend_op": jnp.zeros((R,), i32),
+        "pend_bin": jnp.zeros((R,), i32),
+        "pend_timer": jnp.zeros((R,), i32),
+    }
+
+
+def coverage(state, xbin, rc: RulesConfig):
+    """[B, R] bool: does rule r cover instance b?"""
+    pa, po, pb, pv = (state["pred_attr"], state["pred_op"],
+                      state["pred_bin"], state["pred_valid"])
+    v = xbin[:, pa]                              # [B, R, F]
+    sat = jnp.where(po[None] == 0, v <= pb[None], v > pb[None])
+    sat = jnp.where(pv[None], sat, True)
+    return jnp.all(sat, axis=-1) & state["active"][None]
+
+
+def first_cover(cov, rc: RulesConfig):
+    """Ordered mode: index of first covering rule, R if none."""
+    R = rc.max_rules
+    idx = jnp.where(cov, jnp.arange(R)[None], R)
+    return jnp.min(idx, axis=-1)
+
+
+def _sdr(cnt, sm, sq):
+    """Standard-deviation reduction for all (attr, bin) thresholds.
+    cnt/sm/sq: [..., m, bins] per-bin target stats."""
+    c = jnp.cumsum(cnt, -1)
+    s = jnp.cumsum(sm, -1)
+    q = jnp.cumsum(sq, -1)
+    ct, st, qt = c[..., -1:], s[..., -1:], q[..., -1:]
+
+    def sd(n, sm_, sq_):
+        n = jnp.maximum(n, 1e-9)
+        var = jnp.maximum(sq_ / n - jnp.square(sm_ / n), 0.0)
+        return jnp.sqrt(var)
+
+    tot_sd = sd(ct, st, qt)
+    left_sd = sd(c, s, q)
+    right_sd = sd(ct - c, st - s, qt - q)
+    n = jnp.maximum(ct, 1e-9)
+    sdr = tot_sd - (c / n) * left_sd - ((ct - c) / n) * right_sd
+    valid = (c > 0) & ((ct - c) > 0)
+    return jnp.where(valid, sdr, -BIG)
+
+
+def _expansion_decision(cnt, sm, sq, rc: RulesConfig):
+    """Return (expand?, attr, bin, op) from SDR + Hoeffding ratio test.
+
+    Top-2 over ATTRIBUTES (adjacent thresholds of one attribute tie);
+    the Hoeffding n is the rule's accumulated statistics count, derived
+    from the cnt tensor itself.
+    """
+    sdr = _sdr(cnt, sm, sq)                       # [..., m, bins]
+    per_attr = sdr.max(-1)                        # [..., m]
+    bin_per_attr = sdr.argmax(-1)
+    top2, idx2 = jax.lax.top_k(per_attr, 2)
+    s1, s2 = top2[..., 0], top2[..., 1]
+    attr = idx2[..., 0]
+    tbin = jnp.take_along_axis(bin_per_attr, attr[..., None], -1)[..., 0]
+    n_seen = cnt.sum(-1).max(-1)                  # instances in the stats
+    eps = jnp.sqrt(rc.eps_n / jnp.maximum(n_seen, 1.0))
+    ratio = jnp.where(s1 > 0, jnp.maximum(s2, 0.0) / jnp.maximum(s1, 1e-9), 1.0)
+    ok = (s1 > 0) & ((ratio + eps < 1.0) | (eps < rc.tau))
+    # keep the branch with more mass (documented simplification)
+    c = jnp.cumsum(cnt, -1)
+    sel_c = jnp.take_along_axis(
+        c, attr[..., None, None].repeat(c.shape[-1], -1), -2)[..., 0, :]
+    sel = jnp.take_along_axis(sel_c, tbin[..., None], -1)[..., 0]
+    tot = sel_c[..., -1]
+    op = jnp.where(sel >= tot - sel, 0, 1).astype(i32)   # 0: keep <=, 1: keep >
+    return ok, attr.astype(i32), tbin.astype(i32), op
+
+
+class AMRules:
+    """Sequential reference (MAMR) and the shared mechanics."""
+
+    def __init__(self, rc: RulesConfig):
+        self.rc = rc
+
+    def init(self, key=None):
+        return init_rules(self.rc)
+
+    # ------------------------------------------------------------- step
+
+    def step(self, state, xbin, y):
+        """Prequential step.  xbin: [B,m] int bins; y: [B] float targets."""
+        rc = self.rc
+        R = rc.max_rules
+        cov = coverage(state, xbin, rc)
+        first = first_cover(cov, rc)                       # [B]
+        covered = first < R
+        head_mean = state["head_sum"] / jnp.maximum(state["head_n"], 1.0)
+        d_mean = state["d_sum"] / jnp.maximum(state["d_n"], 1.0)
+        pred = jnp.where(covered, head_mean[jnp.minimum(first, R - 1)], d_mean)
+        err = y - pred
+        abs_err = jnp.abs(err)
+
+        state = dict(state)
+        # ---- update covered rules' head + stats (scatter by rule id) ----
+        oh = jax.nn.one_hot(jnp.where(covered, first, R), R + 1, dtype=f32)[:, :R]
+        state["head_n"] = state["head_n"] + oh.sum(0)
+        state["head_sum"] = state["head_sum"] + (oh * y[:, None]).sum(0)
+        state["since"] = state["since"] + oh.sum(0)
+        binoh = jax.nn.one_hot(xbin, rc.n_bins, dtype=f32)   # [B,m,nb]
+        ridx = jnp.where(covered, first, R)                  # scratch row R
+        st = state["stats"]
+        def pad_add(arr, val):
+            pad = jnp.zeros((1, *arr.shape[1:]), arr.dtype)
+            return jnp.concatenate([arr, pad], 0).at[ridx].add(val)[:R]
+        st = {
+            "cnt": pad_add(st["cnt"], binoh),
+            "sum": pad_add(st["sum"], binoh * y[:, None, None]),
+            "sq": pad_add(st["sq"], binoh * jnp.square(y)[:, None, None]),
+        }
+        state["stats"] = st
+
+        # ---- default rule update with uncovered instances ----------------
+        w = (~covered).astype(f32)
+        state["d_n"] = state["d_n"] + w.sum()
+        state["d_sum"] = state["d_sum"] + (w * y).sum()
+        state["d_since"] = state["d_since"] + w.sum()
+        ds = state["d_stats"]
+        ds = {
+            "cnt": ds["cnt"] + (binoh * w[:, None, None]).sum(0),
+            "sum": ds["sum"] + (binoh * (w * y)[:, None, None]).sum(0),
+            "sq": ds["sq"] + (binoh * (w * jnp.square(y))[:, None, None]).sum(0),
+        }
+        state["d_stats"] = ds
+
+        # ---- Page-Hinkley drift eviction ---------------------------------
+        rule_err = (oh * abs_err[:, None]).sum(0) / jnp.maximum(oh.sum(0), 1.0)
+        has = oh.sum(0) > 0
+        mt = jnp.where(has, state["ph_m"] + rule_err - state["ph_err"]
+                       - rc.ph_alpha, state["ph_m"])
+        err_avg = jnp.where(
+            has, 0.99 * state["ph_err"] + 0.01 * rule_err, state["ph_err"])
+        ph_min = jnp.minimum(state["ph_min"], mt)
+        drift = state["active"] & (mt - ph_min > rc.ph_lambda)
+        state["ph_m"], state["ph_min"], state["ph_err"] = mt, ph_min, err_avg
+        state = self._evict(state, drift)
+
+        # ---- expansions ---------------------------------------------------
+        state = self._apply_pending(state)
+        state = self._try_expand(state)
+        state = self._try_default_expand(state)
+
+        metrics = {
+            "abs_err": abs_err.sum(),
+            "sq_err": jnp.square(err).sum(),
+            "seen": jnp.asarray(y.shape[0], f32),
+            "n_rules": jnp.sum(state["active"].astype(f32)),
+        }
+        return state, metrics
+
+    # ------------------------------------------------------------ pieces
+
+    def _evict(self, state, drift):
+        state = dict(state)
+        state["active"] = state["active"] & ~drift
+        state["pred_valid"] = jnp.where(drift[:, None], False,
+                                        state["pred_valid"])
+        zero = lambda a: jnp.where(
+            drift.reshape((-1,) + (1,) * (a.ndim - 1)), 0, a)
+        state["head_n"] = zero(state["head_n"])
+        state["head_sum"] = zero(state["head_sum"])
+        state["since"] = zero(state["since"])
+        state["stats"] = jax.tree.map(zero, state["stats"])
+        state["ph_m"] = zero(state["ph_m"])
+        state["ph_min"] = zero(state["ph_min"])
+        state["ph_err"] = zero(state["ph_err"])
+        state["n_removed"] = state["n_removed"] + drift.sum().astype(i32)
+        return state
+
+    def _try_expand(self, state):
+        """Rules with >= n_min fresh updates attempt an SDR expansion."""
+        rc = self.rc
+        st = state["stats"]
+        ok, attr, tbin, op = _expansion_decision(
+            st["cnt"], st["sum"], st["sq"], rc)
+        ready = state["active"] & (state["since"] >= rc.n_min)
+        room = state["pred_valid"].sum(-1) < rc.max_feats
+        expand = ready & ok & room
+        state = dict(state)
+        state["since"] = jnp.where(ready, 0.0, state["since"])
+        if rc.delay == 0:
+            return self._do_expand(state, expand, attr, tbin, op)
+        state["pend_rule_valid"] = state["pend_rule_valid"] | expand
+        state["pend_attr"] = jnp.where(expand, attr, state["pend_attr"])
+        state["pend_op"] = jnp.where(expand, op, state["pend_op"])
+        state["pend_bin"] = jnp.where(expand, tbin, state["pend_bin"])
+        state["pend_timer"] = jnp.where(expand, rc.delay, state["pend_timer"])
+        return state
+
+    def _apply_pending(self, state):
+        rc = self.rc
+        if rc.delay == 0:
+            return state
+        state = dict(state)
+        timer = jnp.where(state["pend_rule_valid"], state["pend_timer"] - 1,
+                          state["pend_timer"])
+        mature = state["pend_rule_valid"] & (timer <= 0)
+        state["pend_timer"] = timer
+        state["pend_rule_valid"] = state["pend_rule_valid"] & ~mature
+        return self._do_expand(state, mature, state["pend_attr"],
+                               state["pend_bin"], state["pend_op"],
+                               bins_are_pending=True)
+
+    def _do_expand(self, state, expand, attr, tbin, op, bins_are_pending=False):
+        rc = self.rc
+        state = dict(state)
+        slot = state["pred_valid"].sum(-1)                 # next free feat
+        slot = jnp.minimum(slot, rc.max_feats - 1)
+        F = rc.max_feats
+        sl_oh = jax.nn.one_hot(slot, F, dtype=bool) & expand[:, None]
+        state["pred_attr"] = jnp.where(sl_oh, attr[:, None], state["pred_attr"])
+        state["pred_bin"] = jnp.where(sl_oh, tbin[:, None], state["pred_bin"])
+        state["pred_op"] = jnp.where(sl_oh, op[:, None], state["pred_op"])
+        state["pred_valid"] = state["pred_valid"] | sl_oh
+        # expansion resets the rule's statistics (it now covers a subset)
+        zero = lambda a: jnp.where(
+            expand.reshape((-1,) + (1,) * (a.ndim - 1)), 0, a)
+        state["stats"] = jax.tree.map(zero, state["stats"])
+        state["n_feats"] = state["n_feats"] + expand.sum().astype(i32)
+        return state
+
+    def _try_default_expand(self, state):
+        """Default rule expansion creates a NEW rule (Alg: add to rule set)."""
+        rc = self.rc
+        ds = state["d_stats"]
+        ok, attr, tbin, op = _expansion_decision(
+            ds["cnt"][None], ds["sum"][None], ds["sq"][None], rc)
+        ok, attr, tbin, op = ok[0], attr[0], tbin[0], op[0]
+        ready = state["d_since"] >= rc.n_min
+        free = ~state["active"]
+        has_free = jnp.any(free)
+        slot = jnp.argmax(free)                            # first free slot
+        create = ready & ok & has_free
+        state = dict(state)
+        state["d_since"] = jnp.where(ready, 0.0, state["d_since"])
+        soh = jax.nn.one_hot(slot, rc.max_rules, dtype=bool) & create
+        state["active"] = state["active"] | soh
+        f0 = jax.nn.one_hot(0, rc.max_feats, dtype=bool)
+        state["pred_attr"] = jnp.where(soh[:, None] & f0[None], attr,
+                                       state["pred_attr"])
+        state["pred_bin"] = jnp.where(soh[:, None] & f0[None], tbin,
+                                      state["pred_bin"])
+        state["pred_op"] = jnp.where(soh[:, None] & f0[None], op,
+                                     state["pred_op"])
+        state["pred_valid"] = jnp.where(soh[:, None], f0[None],
+                                        state["pred_valid"])
+        # head seeded from the default rule's mean; fresh stats
+        d_mean = state["d_sum"] / jnp.maximum(state["d_n"], 1.0)
+        state["head_n"] = jnp.where(soh, 1.0, state["head_n"])
+        state["head_sum"] = jnp.where(soh, d_mean, state["head_sum"])
+        reset = lambda a, v=0.0: jnp.where(
+            soh.reshape((-1,) + (1,) * (a.ndim - 1)), v, a)
+        state["stats"] = jax.tree.map(lambda a: reset(a), state["stats"])
+        state["since"] = reset(state["since"])
+        state["ph_m"] = reset(state["ph_m"])
+        state["ph_min"] = reset(state["ph_min"])
+        state["ph_err"] = reset(state["ph_err"])
+        # default rule restarts
+        dz = jax.tree.map(jnp.zeros_like, state["d_stats"])
+        state["d_stats"] = jax.tree.map(
+            lambda old, z: jnp.where(create, z, old), state["d_stats"], dz)
+        state["d_n"] = jnp.where(create, 0.0, state["d_n"])
+        state["d_sum"] = jnp.where(create, 0.0, state["d_sum"])
+        state["n_created"] = state["n_created"] + create.astype(i32)
+        state["n_rules"] = jnp.sum(state["active"].astype(i32))
+        return state
+
+    def run(self, state, x_stream, y_stream):
+        def body(st, xy):
+            st, m = self.step(st, *xy)
+            return st, m
+        return jax.lax.scan(body, state, (x_stream, y_stream))
+
+
+class VAMR(AMRules):
+    """Vertical AMRules: statistics sharded by rule id; expansion feedback
+    delayed.  Functionally == AMRules with delay>0; under the ShardMapEngine
+    the 'rules' axis shards over 'model' (see state_sharding in the
+    processor wrapper)."""
+
+    def __init__(self, rc: RulesConfig):
+        if rc.delay == 0:
+            rc = dataclasses.replace(rc, delay=1)
+        super().__init__(rc)
+
+
+class HAMR:
+    """Hybrid AMRules (paper section 7.2 / Fig. 11): `replicas` model
+    aggregators each process 1/replicas of the stream against the SAME rule
+    set; learner statistics merge by rule-id key grouping; uncovered
+    instances go to ONE centralized default-rule learner, whose expansions
+    broadcast to all aggregators -- that centralization is what keeps the
+    replicas in synch (the paper's fix for conflicting default rules).
+
+    Tensorized: the replica axis is a leading vmap axis for the
+    aggregator-side phase (coverage + prediction + per-replica error);
+    statistics updates then SUM across replicas (the key-grouped shuffle a
+    DSPE performs), and the shared rule structure stays replica-free.
+    """
+
+    def __init__(self, rc: RulesConfig, replicas: int = 2):
+        if rc.delay == 0:
+            rc = dataclasses.replace(rc, delay=1)
+        self.rc = rc
+        self.replicas = replicas
+        self._inner = AMRules(rc)
+
+    def init(self, key=None):
+        return init_rules(self.rc)
+
+    def step(self, state, xbin, y):
+        rc = self.rc
+        r = self.replicas
+        B = y.shape[0]
+        Bs = (B // r) * r
+        xs = xbin[:Bs].reshape(r, B // r, -1)
+        ys = y[:Bs].reshape(r, B // r)
+
+        # ---- aggregator phase (per replica, shared rule set) -------------
+        R = rc.max_rules
+        head_mean = state["head_sum"] / jnp.maximum(state["head_n"], 1.0)
+        d_mean = state["d_sum"] / jnp.maximum(state["d_n"], 1.0)
+
+        def replica(xb, yb):
+            cov = coverage(state, xb, rc)
+            first = first_cover(cov, rc)
+            covered = first < R
+            pred = jnp.where(covered, head_mean[jnp.minimum(first, R - 1)],
+                             d_mean)
+            return first, covered, jnp.abs(yb - pred), jnp.square(yb - pred)
+
+        first, covered, abse, sqe = jax.vmap(replica)(xs, ys)   # [r, B/r]
+
+        # ---- learner phase: merge replica updates (key grouping) ---------
+        flat_first = first.reshape(-1)
+        flat_cov = covered.reshape(-1)
+        flat_x = xs.reshape(Bs, -1)
+        flat_y = ys.reshape(-1)
+        merged = dict(state)
+        oh = jax.nn.one_hot(jnp.where(flat_cov, flat_first, R), R + 1,
+                            dtype=f32)[:, :R]
+        merged["head_n"] = state["head_n"] + oh.sum(0)
+        merged["head_sum"] = state["head_sum"] + (oh * flat_y[:, None]).sum(0)
+        merged["since"] = state["since"] + oh.sum(0)
+        binoh = jax.nn.one_hot(flat_x, rc.n_bins, dtype=f32)
+        ridx = jnp.where(flat_cov, flat_first, R)
+
+        def pad_add(arr, val):
+            pad = jnp.zeros((1, *arr.shape[1:]), arr.dtype)
+            return jnp.concatenate([arr, pad], 0).at[ridx].add(val)[:R]
+
+        st = state["stats"]
+        merged["stats"] = {
+            "cnt": pad_add(st["cnt"], binoh),
+            "sum": pad_add(st["sum"], binoh * flat_y[:, None, None]),
+            "sq": pad_add(st["sq"], binoh * jnp.square(flat_y)[:, None, None]),
+        }
+
+        # ---- centralized default-rule learner ----------------------------
+        w = (~flat_cov).astype(f32)
+        merged["d_n"] = state["d_n"] + w.sum()
+        merged["d_sum"] = state["d_sum"] + (w * flat_y).sum()
+        merged["d_since"] = state["d_since"] + w.sum()
+        ds = state["d_stats"]
+        merged["d_stats"] = {
+            "cnt": ds["cnt"] + (binoh * w[:, None, None]).sum(0),
+            "sum": ds["sum"] + (binoh * (w * flat_y)[:, None, None]).sum(0),
+            "sq": ds["sq"] + (binoh * (w * jnp.square(flat_y))[:, None, None]).sum(0),
+        }
+
+        # ---- shared expansion/drift machinery (delayed broadcast) --------
+        merged = self._inner._apply_pending(merged)
+        merged = self._inner._try_expand(merged)
+        merged = self._inner._try_default_expand(merged)
+
+        metrics = {"abs_err": abse.sum(), "sq_err": sqe.sum(),
+                   "seen": jnp.asarray(Bs, f32),
+                   "n_rules": jnp.sum(merged["active"].astype(f32))}
+        return merged, metrics
+
+    def run(self, state, x_stream, y_stream):
+        def body(st, xy):
+            st, m = self.step(st, *xy)
+            return st, m
+        return jax.lax.scan(body, state, (x_stream, y_stream))

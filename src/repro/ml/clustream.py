@@ -1,0 +1,142 @@
+"""Distributed CluStream (paper section 5): online micro-clusters + periodic
+micro-batch macro-clustering.
+
+Micro-clusters are cluster-feature vectors CF = (n, LS, SS, LT, ST) kept as
+dense tensors [K, ...].  Online phase: each instance joins its nearest
+micro-cluster if within the RMS radius boundary, else replaces the stalest
+cluster (capacity-bounded: no dynamic allocation).  Every `period`
+instances a micro-batch k-means over micro-cluster centroids produces the
+macro-clusters -- exactly the paper's "triggered periodically, configured
+via a command line parameter (e.g. every 10 000 examples)".
+
+Distribution: horizontal -- the stream shards over the data axis, each
+shard maintains local micro-clusters, and the macro phase merges them (a
+psum-style reduction), matching SAMOA's distributed CluStream design.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class CluStreamConfig:
+    n_dims: int
+    n_micro: int = 100
+    n_macro: int = 5
+    radius_factor: float = 2.0
+    period: int = 10_000        # macro-clustering trigger (instances)
+    kmeans_iters: int = 10
+
+
+def init_clustream(cc: CluStreamConfig, key, init_x=None):
+    K, d = cc.n_micro, cc.n_dims
+    if init_x is None:
+        centers = jax.random.uniform(key, (K, d))
+    else:
+        centers = init_x[:K]
+    # seed with a generous per-cluster variance so cold clusters absorb
+    # their neighbourhood instead of starving (radius ~ 0.3*sqrt(d))
+    var0 = 0.1
+    return {
+        "n": jnp.ones((K,), f32) * 1e-3,
+        "ls": centers * 1e-3,
+        "ss": (jnp.square(centers) + var0) * 1e-3,
+        "lt": jnp.zeros((K,), f32),
+        "st": jnp.zeros((K,), f32),
+        "t": jnp.zeros((), f32),
+    }
+
+
+def _centroids(state):
+    return state["ls"] / jnp.maximum(state["n"][:, None], 1e-9)
+
+
+def _radius(state):
+    n = jnp.maximum(state["n"], 1e-9)
+    var = jnp.maximum(state["ss"] / n[:, None]
+                      - jnp.square(state["ls"] / n[:, None]), 0.0)
+    return jnp.sqrt(var.sum(-1))
+
+
+def update(state, x, cc: CluStreamConfig):
+    """Online phase for a micro-batch x: [B, d]."""
+    B = x.shape[0]
+    cent = _centroids(state)
+    d2 = jnp.sum(jnp.square(x[:, None] - cent[None]), -1)   # [B, K]
+    nearest = jnp.argmin(d2, -1)
+    ndist = jnp.sqrt(jnp.take_along_axis(d2, nearest[:, None], 1)[:, 0])
+    rad = _radius(state)[nearest] * cc.radius_factor + 1e-6
+    absorb = ndist <= rad
+
+    t = state["t"] + jnp.arange(1, B + 1, dtype=f32)
+    K = cc.n_micro
+    oh = jax.nn.one_hot(jnp.where(absorb, nearest, K), K + 1, dtype=f32)[:, :K]
+    state = dict(state)
+    state["n"] = state["n"] + oh.sum(0)
+    state["ls"] = state["ls"] + oh.T @ x
+    state["ss"] = state["ss"] + oh.T @ jnp.square(x)
+    state["lt"] = state["lt"] + oh.T @ t
+    state["st"] = state["st"] + oh.T @ jnp.square(t)
+
+    # non-absorbed instances replace the stalest micro-clusters (batch: the
+    # first such instance wins; capacity-bounded replacement)
+    stale = state["lt"] / jnp.maximum(state["n"], 1e-9)
+    victim = jnp.argmin(stale)
+    first_new = jnp.argmax(~absorb)
+    any_new = jnp.any(~absorb)
+    xn = x[first_new]
+    tn = t[first_new]
+    def repl(arr, val):
+        return jnp.where(
+            (jnp.arange(K) == victim).reshape((-1,) + (1,) * (arr.ndim - 1))
+            & any_new, val, arr)
+    state["n"] = repl(state["n"], 1.0)
+    state["ls"] = repl(state["ls"], xn[None])
+    state["ss"] = repl(state["ss"], jnp.square(xn)[None])
+    state["lt"] = repl(state["lt"], tn)
+    state["st"] = repl(state["st"], jnp.square(tn))
+    state["t"] = state["t"] + B
+    return state
+
+
+def macro_cluster(state, cc: CluStreamConfig, key):
+    """Micro-batch phase: weighted k-means over micro-cluster centroids."""
+    cent = _centroids(state)
+    w = state["n"]
+    k = cc.n_macro
+    init = cent[jnp.argsort(-w)[:k]]
+
+    def step(c, _):
+        d2 = jnp.sum(jnp.square(cent[:, None] - c[None]), -1)   # [K, k]
+        a = jnp.argmin(d2, -1)
+        oh = jax.nn.one_hot(a, k, dtype=f32) * w[:, None]
+        tot = oh.sum(0)
+        newc = (oh.T @ cent) / jnp.maximum(tot[:, None], 1e-9)
+        newc = jnp.where(tot[:, None] > 0, newc, c)
+        return newc, None
+
+    centers, _ = jax.lax.scan(step, init, None, length=cc.kmeans_iters)
+    return centers
+
+
+def merge(states):
+    """Merge shard-local micro-cluster states (distributed reduction)."""
+    return jax.tree.map(lambda *xs: sum(xs) if xs[0].ndim else xs[0],
+                        *states)
+
+
+def assign(centers, x):
+    d2 = jnp.sum(jnp.square(x[:, None] - centers[None]), -1)
+    return jnp.argmin(d2, -1)
+
+
+def ssq(centers, x):
+    d2 = jnp.sum(jnp.square(x[:, None] - centers[None]), -1)
+    return jnp.min(d2, -1).sum()

@@ -1,0 +1,140 @@
+"""Streaming change detectors (paper section 5): ADWIN, DDM, EDDM,
+Page-Hinkley -- all as pure functional (state, value) -> (state, drift?).
+
+ADWIN here is the exponential-bucket variant with a fixed number of bucket
+rows (capacity-bounded, jit-able): adjacent-subwindow mean comparison with
+the Hoeffding-style cut threshold.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+# ------------------------------- Page-Hinkley -------------------------------
+
+def ph_init():
+    return {"m": jnp.zeros((), f32), "min": jnp.zeros((), f32),
+            "mean": jnp.zeros((), f32), "n": jnp.zeros((), f32)}
+
+
+def ph_update(state, x, *, alpha=0.005, lam=50.0):
+    n = state["n"] + 1
+    mean = state["mean"] + (x - state["mean"]) / n
+    m = state["m"] + x - mean - alpha
+    mn = jnp.minimum(state["min"], m)
+    drift = m - mn > lam
+    return {"m": m, "min": mn, "mean": mean, "n": n}, drift
+
+
+# ------------------------------------ DDM -----------------------------------
+
+def ddm_init():
+    return {"n": jnp.zeros((), f32), "p": jnp.ones((), f32),
+            "s": jnp.zeros((), f32), "pmin": jnp.ones((), f32) * 1e9,
+            "smin": jnp.ones((), f32) * 1e9}
+
+
+def ddm_update(state, error, *, warn_k=2.0, drift_k=3.0):
+    """error: 0/1 misclassification indicator."""
+    n = state["n"] + 1
+    p = state["p"] + (error - state["p"]) / n
+    s = jnp.sqrt(p * (1 - p) / jnp.maximum(n, 1.0))
+    # only track minima once the estimate has stabilized, otherwise an
+    # early lucky streak (p=0, s=0) makes every later point look like drift
+    better = (n >= 30) & (p + s < state["pmin"] + state["smin"])
+    pmin = jnp.where(better, p, state["pmin"])
+    smin = jnp.where(better, s, state["smin"])
+    drift = (n > 30) & (p + s > pmin + drift_k * smin)
+    new = {"n": n, "p": p, "s": s, "pmin": pmin, "smin": smin}
+    # reset on drift
+    new = jax.tree.map(lambda a, b: jnp.where(drift, a, b), ddm_init(), new)
+    return new, drift
+
+
+# ----------------------------------- EDDM -----------------------------------
+
+def eddm_init():
+    return {"n": jnp.zeros((), f32), "last_err": jnp.zeros((), f32),
+            "mean_d": jnp.zeros((), f32), "var_d": jnp.zeros((), f32),
+            "m2smax": jnp.zeros((), f32), "n_err": jnp.zeros((), f32)}
+
+
+def eddm_update(state, error, *, beta=0.9):
+    """Distance-between-errors detector."""
+    n = state["n"] + 1
+    is_err = error > 0.5
+    dist = n - state["last_err"]
+    n_err = state["n_err"] + is_err
+    delta = dist - state["mean_d"]
+    mean_d = jnp.where(is_err, state["mean_d"] + delta / jnp.maximum(n_err, 1),
+                       state["mean_d"])
+    var_d = jnp.where(is_err, state["var_d"] + delta * (dist - mean_d),
+                      state["var_d"])
+    std = jnp.sqrt(jnp.maximum(var_d / jnp.maximum(n_err - 1, 1), 0))
+    m2s = mean_d + 2 * std
+    m2smax = jnp.maximum(state["m2smax"], jnp.where(is_err, m2s, state["m2smax"]))
+    ratio = m2s / jnp.maximum(m2smax, 1e-9)
+    drift = is_err & (n_err > 30) & (ratio < beta)
+    new = {"n": n, "last_err": jnp.where(is_err, n, state["last_err"]),
+           "mean_d": mean_d, "var_d": var_d, "m2smax": m2smax, "n_err": n_err}
+    new = jax.tree.map(lambda a, b: jnp.where(drift, a, b), eddm_init(), new)
+    return new, drift
+
+
+# ----------------------------------- ADWIN ----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdwinConfig:
+    n_buckets: int = 32       # exponential histogram rows
+    delta: float = 0.002
+
+
+def adwin_init(ac: AdwinConfig):
+    return {"sum": jnp.zeros((ac.n_buckets,), f32),
+            "cnt": jnp.zeros((ac.n_buckets,), f32),
+            "n": jnp.zeros((), f32)}
+
+
+def adwin_update(state, x, ac: AdwinConfig):
+    """Exponential-histogram ADWIN: bucket 0 is newest.  Compression: when a
+    bucket's count reaches 2^i it cascades into bucket i+1 (amortized here
+    as a soft cascade each step -- capacity-bounded approximation)."""
+    nb = ac.n_buckets
+    s = state["sum"].at[0].add(x)
+    c = state["cnt"].at[0].add(1.0)
+    cap = 2.0 ** jnp.arange(nb)
+    # cascade overflowing buckets one level down
+    overflow = c >= 2 * cap
+    carry_c = jnp.where(overflow, cap, 0.0)
+    carry_s = jnp.where(overflow, s * jnp.where(c > 0, cap / jnp.maximum(c, 1e-9), 0.0), 0.0)
+    c = c - carry_c + jnp.roll(carry_c, 1).at[0].set(0.0)
+    s = s - carry_s + jnp.roll(carry_s, 1).at[0].set(0.0)
+    n = state["n"] + 1
+
+    # check every prefix/suffix cut for mean difference above eps_cut
+    csum = jnp.cumsum(s)
+    ccnt = jnp.cumsum(c)
+    tot_s, tot_c = csum[-1], ccnt[-1]
+    n0 = jnp.maximum(ccnt, 1e-9)              # newest-side window
+    n1 = jnp.maximum(tot_c - ccnt, 1e-9)
+    mu0 = csum / n0
+    mu1 = (tot_s - csum) / n1
+    m_inv = 1 / n0 + 1 / n1
+    dd = math.log(2.0 / ac.delta)
+    var = jnp.clip((tot_s / jnp.maximum(tot_c, 1e-9))
+                   * (1 - tot_s / jnp.maximum(tot_c, 1e-9)), 0.0, 0.25)
+    eps = jnp.sqrt(2 * m_inv * var * dd) + 2.0 / 3.0 * m_inv * dd
+    valid = (ccnt > 5) & ((tot_c - ccnt) > 5)
+    drift = jnp.any(valid & (jnp.abs(mu0 - mu1) > eps))
+    # on drift: drop the oldest half of the window
+    half = jnp.arange(nb) < nb // 2
+    s = jnp.where(drift, jnp.where(half, s, 0.0), s)
+    c = jnp.where(drift, jnp.where(half, c, 0.0), c)
+    return {"sum": s, "cnt": c, "n": n}, drift

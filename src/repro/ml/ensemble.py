@@ -1,0 +1,138 @@
+"""Adaptive ensembles (paper section 5): OzaBag / OzaBoost with pluggable
+change detectors (ADWIN / DDM / EDDM / Page-Hinkley).
+
+Online bagging (Oza & Russell): each base learner trains on each instance
+with weight ~ Poisson(1).  Online boosting: the Poisson rate is scaled up
+for instances the previous learners got wrong.  Adaptive variants attach a
+change detector per member; on drift the member is reset (ADWIN bagging).
+
+Base learner: the tensorized Hoeffding tree (vmap'd across members) --
+these are the meta-algorithms SAMOA pairs with external single-machine
+classifiers; here the base is our own tree, pluggable via init/step fns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.ml import detectors, htree
+from repro.ml.htree import TreeConfig
+from repro.ml.vht import VHT, VHTConfig
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleConfig:
+    tree: TreeConfig
+    n_members: int = 10
+    boost: bool = False
+    detector: str = "adwin"      # adwin | ddm | eddm | ph | none
+
+
+class OzaEnsemble:
+    def __init__(self, ec: EnsembleConfig):
+        self.ec = ec
+        self.tc = ec.tree
+        self._vht = VHT(VHTConfig(self.tc))
+        self._ac = detectors.AdwinConfig()
+
+    def _det_init(self):
+        d = self.ec.detector
+        if d == "adwin":
+            one = detectors.adwin_init(self._ac)
+        elif d == "ddm":
+            one = detectors.ddm_init()
+        elif d == "eddm":
+            one = detectors.eddm_init()
+        elif d == "ph":
+            one = detectors.ph_init()
+        else:
+            return None
+        return jax.tree.map(lambda x: jnp.stack([x] * self.ec.n_members), one)
+
+    def _det_update(self, dst, err_rate):
+        d = self.ec.detector
+        if d == "adwin":
+            fn = partial(detectors.adwin_update, ac=self._ac)
+            return jax.vmap(lambda s, x: fn(s, x))(dst, err_rate)
+        if d == "ddm":
+            return jax.vmap(detectors.ddm_update)(dst, err_rate)
+        if d == "eddm":
+            return jax.vmap(detectors.eddm_update)(dst, err_rate)
+        if d == "ph":
+            return jax.vmap(detectors.ph_update)(dst, err_rate)
+        return dst, jnp.zeros((self.ec.n_members,), bool)
+
+    def init(self, key):
+        one = htree.init_tree(self.tc)
+        trees = jax.tree.map(lambda x: jnp.stack([x] * self.ec.n_members), one)
+        return {"trees": trees, "det": self._det_init(),
+                "lam_sc": jnp.ones((self.ec.n_members,), f32),
+                "key": key}
+
+    def step(self, state, xbin, y):
+        ec, tc = self.ec, self.tc
+        M = ec.n_members
+        key, k1 = jax.random.split(state["key"])
+
+        # --- predict: weighted vote --------------------------------------
+        def pred_one(tree):
+            yh, _ = htree.predict(tree, xbin, tc)
+            return yh
+        votes = jax.vmap(pred_one)(state["trees"])          # [M, B]
+        vote_oh = jax.nn.one_hot(votes, tc.n_classes).sum(0)
+        pred = jnp.argmax(vote_oh, -1)
+        correct = jnp.sum((pred == y).astype(f32))
+
+        # --- per-member training weights ----------------------------------
+        lam = jnp.ones((M, 1), f32)
+        if ec.boost:
+            # boosting: upweight instances mispredicted by earlier members
+            # (parallel approximation: weight by current member error)
+            member_err = (votes != y[None]).astype(f32)      # [M, B]
+            cum_err = jnp.cumsum(member_err, 0) / jnp.arange(1, M + 1)[:, None]
+            lam = 1.0 + 2.0 * jnp.concatenate(
+                [jnp.zeros((1, member_err.shape[1])), cum_err[:-1]], 0)
+        w = jax.random.poisson(k1, lam, (M, xbin.shape[0])).astype(f32)
+
+        # --- train members (vmap) ----------------------------------------
+        def train_one(tree, wts):
+            leaf = htree.route(tree, xbin, tc)
+            tree2 = htree.update_stats(tree, leaf, xbin, y, wts, tc)
+            should, battr, bbin = htree.decide_splits(tree2, tc)
+            tree2 = dict(tree2)
+            att = (tree2["split_attr"] < 0) & (tree2["since_attempt"] >= tc.n_min)
+            tree2["since_attempt"] = jnp.where(att, 0.0, tree2["since_attempt"])
+            tree2, _ = htree.apply_splits(tree2, should, battr, bbin, tc)
+            return tree2
+        trees = jax.vmap(train_one)(state["trees"], w)
+
+        # --- change detection: reset drifted members ----------------------
+        det = state["det"]
+        if det is not None:
+            member_err_rate = (votes != y[None]).astype(f32).mean(-1)
+            det, drift = self._det_update(det, member_err_rate)
+            fresh = htree.init_tree(tc)
+            def reset_member(old, fr):
+                return jnp.where(
+                    drift.reshape((-1,) + (1,) * (old.ndim - 1)), fr[None], old)
+            trees = jax.tree.map(reset_member, trees, fresh)
+        n_drift = drift.sum() if det is not None else jnp.zeros((), i32)
+
+        new_state = {"trees": trees, "det": det, "lam_sc": state["lam_sc"],
+                     "key": key}
+        metrics = {"correct": correct, "seen": jnp.asarray(y.shape[0], f32),
+                   "drifts": n_drift.astype(f32)}
+        return new_state, metrics
+
+    def run(self, state, x_stream, y_stream):
+        def body(st, xy):
+            st, m = self.step(st, *xy)
+            return st, m
+        return jax.lax.scan(body, state, (x_stream, y_stream))

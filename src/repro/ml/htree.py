@@ -1,0 +1,247 @@
+"""Tensorized streaming Hoeffding tree (VFDT) -- capacity-bounded, jit-able.
+
+The JVM pointer tree becomes dense arrays (DESIGN.md section 2): a node pool
+of `max_nodes`, binary threshold splits over *binned* attribute values, and
+the sufficient statistics n_ijk as one tensor
+
+    stats[node, attr, bin, class]
+
+whose ATTRIBUTE axis is the paper's vertical-parallelism axis: key grouping
+(leaf id, attr id) -> shard `attr` over the 'model' mesh axis.  One copy of
+every counter lives in the system (the paper's memory argument); the split
+criterion reduces over (bin, class) per attribute *in parallel across the
+attribute shards*, exactly like the LS processors of Figure 2.
+
+Numeric attributes use histogram bins (the standard VFDT-with-histograms
+approximation of MOA's Gaussian estimators); categorical attributes map
+bins = categories and use one-vs-rest binary splits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+i32 = jnp.int32
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    n_attrs: int
+    n_bins: int = 8
+    n_classes: int = 2
+    max_nodes: int = 255          # odd: root + 2k children
+    max_depth: int = 24
+    n_min: int = 200              # grace period between split attempts
+    delta: float = 1e-7           # Hoeffding confidence
+    tau: float = 0.05             # tie-break threshold
+    split_delay: int = 0          # D engine-steps between decide & apply
+    buffer_size: int = 0          # wk(z); 0 = wok when delay>0, local if D=0
+    use_pallas: bool = False
+
+    @property
+    def range_r(self) -> float:
+        return math.log2(max(self.n_classes, 2))
+
+
+def init_tree(tc: TreeConfig):
+    N = tc.max_nodes
+    state = {
+        "split_attr": jnp.full((N,), -1, i32),
+        "split_bin": jnp.zeros((N,), i32),
+        "children": jnp.zeros((N, 2), i32),
+        "stats": jnp.zeros((N, tc.n_attrs, tc.n_bins, tc.n_classes), f32),
+        "class_counts": jnp.zeros((N, tc.n_classes), f32),
+        "since_attempt": jnp.zeros((N,), f32),
+        "n_total": jnp.zeros((N,), f32),
+        "depth": jnp.zeros((N,), i32),
+        "n_nodes": jnp.ones((), i32),
+        # pending split feedback (wok / wk(z) staleness emulation)
+        "pending": jnp.zeros((N,), bool),
+        "pending_attr": jnp.zeros((N,), i32),
+        "pending_bin": jnp.zeros((N,), i32),
+        "pending_timer": jnp.zeros((N,), i32),
+        "n_splits": jnp.zeros((), i32),
+    }
+    if tc.buffer_size:
+        state["buf_x"] = jnp.zeros((tc.buffer_size, tc.n_attrs), i32)
+        state["buf_y"] = jnp.zeros((tc.buffer_size,), i32)
+        state["buf_valid"] = jnp.zeros((tc.buffer_size,), bool)
+        state["buf_n"] = jnp.zeros((), i32)
+    return state
+
+
+# --------------------------------------------------------------------------
+# routing (model aggregator: sort instance to leaf -- Alg. 1 line 1)
+# --------------------------------------------------------------------------
+
+def route(state, xbin, tc: TreeConfig):
+    """xbin: [B, m] int32 binned attributes -> leaf ids [B]."""
+    B = xbin.shape[0]
+
+    def step(_, node):
+        attr = state["split_attr"][node]                 # [B]
+        is_leaf = attr < 0
+        a = jnp.maximum(attr, 0)
+        v = jnp.take_along_axis(xbin, a[:, None], axis=1)[:, 0]
+        go_right = (v > state["split_bin"][node]).astype(i32)
+        nxt = state["children"][node, go_right]
+        return jnp.where(is_leaf, node, nxt)
+
+    node = jnp.zeros((B,), i32)
+    return jax.lax.fori_loop(0, tc.max_depth, step, node)
+
+
+def predict(state, xbin, tc: TreeConfig):
+    leaf = route(state, xbin, tc)
+    counts = state["class_counts"][leaf]
+    return jnp.argmax(counts, axis=-1), leaf
+
+
+# --------------------------------------------------------------------------
+# statistics update (LS processors: Alg. 2)
+# --------------------------------------------------------------------------
+
+def update_stats(state, leaf, xbin, y, w, tc: TreeConfig):
+    """Accumulate n_ijk for a micro-batch.  w: [B] weights (0 = dropped).
+
+    Reference implementation is a scatter-add; the TPU path
+    (repro.kernels.vht_stats) reformulates it as one-hot MXU matmuls.
+    """
+    if tc.use_pallas:
+        from repro.kernels.vht_stats.ops import stats_update
+        new_stats = stats_update(state["stats"], leaf, xbin, y, w)
+    else:
+        binoh = jax.nn.one_hot(xbin, tc.n_bins, dtype=f32)          # [B,m,bins]
+        clsoh = jax.nn.one_hot(y, tc.n_classes, dtype=f32) * w[:, None]
+        val = binoh[..., None] * clsoh[:, None, None, :]            # [B,m,bins,C]
+        new_stats = state["stats"].at[leaf].add(val)
+    clsoh = jax.nn.one_hot(y, tc.n_classes, dtype=f32) * w[:, None]
+    state = dict(state)
+    state["stats"] = new_stats
+    state["class_counts"] = state["class_counts"].at[leaf].add(clsoh)
+    state["since_attempt"] = state["since_attempt"].at[leaf].add(w)
+    state["n_total"] = state["n_total"].at[leaf].add(w)
+    return state
+
+
+# --------------------------------------------------------------------------
+# split criterion (LS: Alg. 3 + MA: Alg. 4)
+# --------------------------------------------------------------------------
+
+def _entropy(counts, axis=-1):
+    tot = counts.sum(axis, keepdims=True)
+    p = counts / jnp.maximum(tot, 1e-12)
+    h = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-12)), 0.0), axis)
+    return jnp.where(tot[..., 0] > 0, h, 0.0)
+
+
+def split_gains(stats, tc: TreeConfig):
+    """Information gain for every (node, attr, threshold-bin).
+
+    stats: [N, m, bins, C] -> gains [N, m, bins]; the reduction over
+    (bins, C) is the per-attribute work the paper parallelizes across LS
+    processors -- under GSPMD the attr axis is sharded, so this einsum
+    IS the parallel criterion computation.
+    """
+    cum = jnp.cumsum(stats, axis=2)                     # left counts at <=t
+    total = cum[:, :, -1:, :]
+    left = cum
+    right = total - left
+    nl = left.sum(-1)
+    nr = right.sum(-1)
+    n = jnp.maximum(nl + nr, 1e-12)
+    h_tot = _entropy(total.squeeze(2) if total.shape[2] == 1 else total[:, :, 0, :])
+    hl = _entropy(left)
+    hr = _entropy(right)
+    gain = h_tot[..., None] - (nl / n * hl + nr / n * hr)
+    valid = (nl > 0) & (nr > 0)
+    return jnp.where(valid, gain, NEG)
+
+
+def hoeffding_bound(n, tc: TreeConfig):
+    return jnp.sqrt(tc.range_r ** 2 * math.log(1.0 / tc.delta) / (2.0 * jnp.maximum(n, 1.0)))
+
+
+def decide_splits(state, tc: TreeConfig):
+    """MA Receive(local_result): top-2 across attributes, Hoeffding test.
+
+    Returns (should_split[N], best_attr[N], best_bin[N]).
+    """
+    gains = split_gains(state["stats"], tc)             # [N, m, bins]
+    N, m, bins = gains.shape
+    # paper (Alg. 3/4): compare the best TWO ATTRIBUTES -- adjacent bins of
+    # one attribute have near-identical gain and would make DeltaG ~ 0
+    per_attr = gains.max(-1)                            # [N, m]
+    best_bin_per_attr = gains.argmax(-1)                # [N, m]
+    top2, idx2 = jax.lax.top_k(per_attr, 2)
+    ga, gb = top2[:, 0], top2[:, 1]
+    best_attr = idx2[:, 0]
+    best_bin = jnp.take_along_axis(best_bin_per_attr, best_attr[:, None],
+                                   1)[:, 0]
+    eps = hoeffding_bound(state["n_total"], tc)
+    is_leaf = state["split_attr"] < 0
+    cls = state["class_counts"]
+    pure = (cls > 0).sum(-1) <= 1
+    attempted = state["since_attempt"] >= tc.n_min
+    ok = (ga > 0) & ((ga - gb > eps) | (eps < tc.tau))
+    depth_ok = state["depth"] < tc.max_depth - 1
+    should = is_leaf & attempted & (~pure) & ok & depth_ok & (~state["pending"])
+    return should, best_attr, best_bin
+
+
+def apply_splits(state, split_mask, best_attr, best_bin, tc: TreeConfig):
+    """Replace chosen leaves by split nodes, allocate 2 children each
+    (MA Alg. 4 lines 6-10; the 'drop' event = children stats start at 0)."""
+    N = tc.max_nodes
+    rank = jnp.cumsum(split_mask.astype(i32)) - 1       # [N]
+    base = state["n_nodes"]
+    room = (base + 2 * (rank + 1)) <= N
+    do = split_mask & room
+    lchild = base + 2 * rank
+    rchild = base + 2 * rank + 1
+    n_new = 2 * jnp.sum(do.astype(i32))
+
+    state = dict(state)
+    state["split_attr"] = jnp.where(do, best_attr, state["split_attr"])
+    state["split_bin"] = jnp.where(do, best_bin, state["split_bin"])
+    ch = state["children"]
+    ch = jnp.where(do[:, None], jnp.stack([lchild, rchild], -1), ch)
+    state["children"] = ch
+
+    # initialize children class counts from the split distribution
+    nodes = jnp.arange(N)
+    cum = jnp.cumsum(state["stats"], axis=2)
+    left_cnt = cum[nodes, jnp.maximum(best_attr, 0), jnp.maximum(best_bin, 0)]
+    right_cnt = cum[nodes, jnp.maximum(best_attr, 0), -1] - left_cnt
+
+    # scratch-row scatter: rows not splitting write to a throwaway slot N
+    l_idx = jnp.where(do, jnp.clip(lchild, 0, N - 1), N)
+    r_idx = jnp.where(do, jnp.clip(rchild, 0, N - 1), N)
+
+    def set_rows(arr, idx, val):
+        pad_shape = (1, *arr.shape[1:])
+        padded = jnp.concatenate([arr, jnp.zeros(pad_shape, arr.dtype)], 0)
+        return padded.at[idx].set(val.astype(arr.dtype))[:N]
+
+    cc = state["class_counts"]
+    cc = set_rows(cc, l_idx, left_cnt)
+    cc = set_rows(cc, r_idx, right_cnt)
+    state["class_counts"] = cc
+    child_depth = state["depth"] + 1
+    dep = set_rows(state["depth"], l_idx, child_depth)
+    dep = set_rows(dep, r_idx, child_depth)
+    state["depth"] = dep
+    # release the split leaf's statistics (drop content event)
+    zero = jnp.zeros_like(state["stats"][0])
+    state["stats"] = jnp.where(do[:, None, None, None], zero[None], state["stats"])
+    state["since_attempt"] = jnp.where(do, 0.0, state["since_attempt"])
+    state["n_nodes"] = base + n_new
+    state["n_splits"] = state["n_splits"] + jnp.sum(do.astype(i32))
+    return state, do

@@ -1,0 +1,10 @@
+from repro.models.params import ParamDef, abstract_params, init_params, param_shardings
+from repro.models.lm import LanguageModel
+
+__all__ = [
+    "ParamDef",
+    "abstract_params",
+    "init_params",
+    "param_shardings",
+    "LanguageModel",
+]

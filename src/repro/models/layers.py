@@ -1,0 +1,633 @@
+"""Neural building blocks for the LM zoo (pure functional JAX).
+
+Conventions:
+  * activations are [batch, seq, d_model] bf16; reductions in fp32
+  * params are dict pytrees declared with ParamDef (see params.py)
+  * every temporal-mixing layer supports three entry points:
+      - train/prefill over a full sequence (chunked flash-style attention,
+        chunked SSM scan) -> O(S * w) memory for local attention, O(S) for SSM
+      - decode: one token against a cache
+  * attention is written XLA-native (scan-over-chunks online softmax); the
+    Pallas kernel in repro.kernels.flash_attention is the TPU-optimized
+    version selected with cfg.use_pallas (interpret-validated on CPU).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.params import ParamDef
+
+f32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_defs(cfg, d: int):
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDef((d,), ("embed",), init="ones", dtype=jnp.float32),
+            "bias": ParamDef((d,), ("embed",), init="zeros", dtype=jnp.float32),
+        }
+    return {"scale": ParamDef((d,), ("embed",), init="ones", dtype=jnp.float32)}
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(f32)
+    if "bias" in p:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, hd, 2, dtype=f32) / hd
+    )  # [hd/2]
+    ang = positions[..., None].astype(f32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked (flash-style) attention -- XLA-native online softmax
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _flash_inner(q, k, v, qpos, kpos, causal, window):
+    """One (q-chunk x kv-chunk) tile.  q:[B,qc,K,G,hd] k/v:[B,kc,K,hd]."""
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(f32), k.astype(f32))
+    s *= 1.0 / math.sqrt(q.shape[-1])
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    return jnp.where(mask[None, None, None], s, NEG_INF)
+
+
+def chunked_attention(
+    q, k, v, *, causal=True, window=0, q_chunk=512, kv_chunk=1024,
+    schedule="scan", q_offset=0, probs_bf16=False,
+):
+    """Online-softmax attention.
+
+    q: [B, S, H, hd]; k, v: [B, T, K, hd] with H = K * G (GQA groups).
+    Returns [B, S, H, hd].  `q_offset`: absolute position of q[0] (prefill
+    continuation); qpos = q_offset + arange(S).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    hv = v.shape[-1]  # value head dim may differ (MLA)
+    G = H // K
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    # pad to multiples
+    Sp = -(-S // q_chunk) * q_chunk
+    Tp = -(-T // kv_chunk) * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    nq, nk = Sp // q_chunk, Tp // kv_chunk
+    qp = qp.reshape(B, nq, q_chunk, K, G, hd)
+    kp = kp.reshape(B, nk, kv_chunk, K, hd)
+    vp = vp.reshape(B, nk, kv_chunk, K, hv)
+
+    def q_block(qi, qc):
+        # qc: [B, q_chunk, K, G, hd]
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kc, vc = inp
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = _flash_inner(qc, kc, vc, qpos, kpos, causal, window)
+            s = jnp.where(
+                (jnp.arange(kv_chunk) < (T - ki * kv_chunk))[None, None, None, None],
+                s, NEG_INF,
+            )
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = p.astype(jnp.bfloat16) if probs_bf16 else p
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", pv,
+                vc if probs_bf16 else vc.astype(f32)).astype(f32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, f32)
+        l0 = jnp.zeros((B, K, G, q_chunk), f32)
+        a0 = jnp.zeros((B, K, G, q_chunk, hv), f32)
+
+        if causal and schedule == "unrolled_causal":
+            # static upper bound per q chunk: kv blocks fully beyond the
+            # causal frontier are skipped at trace time (halves HLO FLOPs)
+            raise RuntimeError("handled by caller")
+
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (ks, kp.swapaxes(0, 1), vp.swapaxes(0, 1))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # [B,K,G,q_chunk,hd]
+
+    if causal and schedule == "unrolled_causal" and q_offset == 0:
+        outs = []
+        for qi in range(nq):
+            # only kv chunks intersecting the causal region of this q chunk
+            hi = min(nk, -(-((qi + 1) * q_chunk) // kv_chunk))
+            lo = max(0, (qi * q_chunk - window) // kv_chunk) if window else 0
+            qc = qp[:, qi]
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            m = jnp.full((B, K, G, q_chunk), NEG_INF, f32)
+            l = jnp.zeros((B, K, G, q_chunk), f32)
+            acc = jnp.zeros((B, K, G, q_chunk, hv), f32)
+            for ki in range(lo, hi):
+                kc, vc = kp[:, ki], vp[:, ki]
+                kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+                s = _flash_inner(qc, kc, vc, qpos, kpos, causal, window)
+                s = jnp.where(
+                    (jnp.arange(kv_chunk) < (T - ki * kv_chunk))[None, None, None, None],
+                    s, NEG_INF,
+                )
+                m_new = jnp.maximum(m, s.max(-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l = l * corr + p.sum(-1)
+                pv = p.astype(jnp.bfloat16) if probs_bf16 else p
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bkgqt,btkd->bkgqd", pv,
+                    vc if probs_bf16 else vc.astype(f32)).astype(f32)
+                m = m_new
+            outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+        out = jnp.stack(outs, 1)  # [B,nq,K,G,qc,hd]
+    else:
+        qs = qp.swapaxes(0, 1)  # [nq,B,qc,K,G,hd]
+        out = jax.lax.map(lambda t: q_block(t[0], t[1]), (jnp.arange(nq), qs))
+        out = out.swapaxes(0, 1)  # [B,nq,K,G,qc,hd]
+
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sp, H, hv)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid):
+    """q: [B,1,H,hd]; caches [B,Smax,K,hd]; valid: bool [Smax] mask of cache
+    entries to attend to.  Keys were rope'd at absolute positions before
+    being written, so storage order (e.g. rolling window buffers) does not
+    affect correctness -- only the validity mask matters."""
+    B, _, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qr = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qr.astype(f32), k_cache.astype(f32))
+    s *= 1.0 / math.sqrt(hd)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(f32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer
+# --------------------------------------------------------------------------
+
+def attention_defs(cfg, *, cross=False):
+    D, H, K, hd = (cfg.d_model, cfg.heads_padded, cfg.kv_heads_padded,
+                   cfg.head_dim)
+    d = {
+        "wq": ParamDef((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDef((D, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
+        d["bk"] = ParamDef((K, hd), ("kv_heads", "head_dim"), init="zeros")
+        d["bv"] = ParamDef((K, hd), ("kv_heads", "head_dim"), init="zeros")
+    return d
+
+
+def attention(p, x, cfg, *, positions=None, cache=None, kv_input=None,
+              causal=True, window=None, is_cross=False):
+    """GQA attention.  cache: {"k","v"} [B,W,K,hd] + "index" (true absolute
+    position).  For windowed layers the cache is a rolling buffer of width
+    W <= window; writes go to index % W.  kv_input: cross-attention source
+    (is_cross=True; at decode time the cross cache is precomputed)."""
+    B, S, _ = x.shape
+    window = cfg.window if window is None else window
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cache is not None and is_cross:
+        # cross-attention decode against a fixed precomputed cache
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        valid = jnp.ones((cache["k"].shape[1],), bool)
+        out = decode_attention(q, cache["k"], cache["v"], valid)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+    src = x if kv_input is None else kv_input
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    # pin activation shardings: one all-reduce per projection (contraction-
+    # sharded weights) instead of a psum per attention tile (Perf iter 2:
+    # qwen prefill_32k had 82k all-reduces from GSPMD sharding q/k/v on the
+    # head_dim contraction of every flash tile)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    use_rope = not cfg.learned_pos_emb and not is_cross
+    if positions is None:
+        positions = jnp.arange(S)[None]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+
+    if cache is not None:
+        # self-attention decode: S == 1, rolling write at index % W
+        idx = cache["index"]
+        W = cache["k"].shape[1]
+        wp = idx % W
+        if use_rope:
+            k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, wp, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, wp, 0, 0))
+        valid = jnp.arange(W) < jnp.minimum(idx + 1, W)
+        out = decode_attention(q, kc, vc, valid)
+        new_cache = {"k": kc, "v": vc, "index": idx}
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    if use_rope:
+        k = rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(
+        q, k, v, causal=causal and kv_input is None, window=window or 0,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        schedule=cfg.attn_schedule, probs_bf16=cfg.attn_probs_bf16,
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), None
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek latent attention)
+# --------------------------------------------------------------------------
+
+def mla_defs(cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    nope = cfg.head_dim
+    r, cq, ckv, vd = cfg.rope_head_dim, cfg.q_lora_rank, cfg.kv_lora_rank, cfg.v_head_dim
+    return {
+        "w_dq": ParamDef((D, cq), ("embed", "q_lora")),
+        "q_norm": ParamDef((cq,), ("q_lora",), init="ones", dtype=jnp.float32),
+        "w_uq": ParamDef((cq, H, nope + r), ("q_lora", "heads", "head_dim")),
+        "w_dkv": ParamDef((D, ckv), ("embed", "kv_lora")),
+        "kv_norm": ParamDef((ckv,), ("kv_lora",), init="ones", dtype=jnp.float32),
+        "w_kr": ParamDef((D, r), ("embed", "head_dim")),
+        "w_uk": ParamDef((ckv, H, nope), ("kv_lora", "heads", "head_dim")),
+        "w_uv": ParamDef((ckv, H, vd), ("kv_lora", "heads", "head_dim")),
+        "wo": ParamDef((H, vd, D), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_attention(p, x, cfg, *, positions=None, cache=None):
+    B, S, _ = x.shape
+    nope, r = cfg.head_dim, cfg.rope_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None]
+
+    cq = apply_norm({"scale": p["q_norm"]}, jnp.einsum("bsd,dc->bsc", x, p["w_dq"]))
+    q = jnp.einsum("bsc,chk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = apply_norm({"scale": p["kv_norm"]}, jnp.einsum("bsd,dc->bsc", x, p["w_dkv"]))
+    k_rope = rope(jnp.einsum("bsd,dr->bsr", x, p["w_kr"])[:, :, None, :],
+                  positions, cfg.rope_theta)[:, :, 0]  # [B,S,r] shared
+
+    if cache is not None:
+        # absorbed decode: score against the latent cache directly
+        idx = cache["index"]
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, idx, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), (0, idx, 0))
+        # q absorbed into latent space: [B,1,H,ckv]
+        q_abs = jnp.einsum("bshn,chn->bshc", q_nope.astype(f32),
+                           p["w_uk"].astype(f32))
+        s = jnp.einsum("bshc,btc->bhst", q_abs, ckv_c.astype(f32))
+        s += jnp.einsum("bshr,btr->bhst", q_rope.astype(f32), kr_c.astype(f32))
+        s *= 1.0 / math.sqrt(nope + r)
+        valid = jnp.arange(ckv_c.shape[1]) < idx + 1
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        pw = jax.nn.softmax(s, -1)
+        ctx_c = jnp.einsum("bhst,btc->bshc", pw, ckv_c.astype(f32))
+        out = jnp.einsum("bshc,chv->bshv", ctx_c, p["w_uv"].astype(f32))
+        out = out.astype(x.dtype)
+        new_cache = {"ckv": ckv_c, "kr": kr_c, "index": idx}
+        return jnp.einsum("bshv,hvd->bsd", out, p["wo"]), new_cache
+
+    # prefill/train: expand latents to per-head k/v, run flash attention
+    k_nope = jnp.einsum("bsc,chn->bshn", ckv, p["w_uk"])
+    v = jnp.einsum("bsc,chv->bshv", ckv, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], r))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    out = chunked_attention(
+        q_full, k, v, causal=True, window=0,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        schedule=cfg.attn_schedule, probs_bf16=cfg.attn_probs_bf16,
+    )
+    return jnp.einsum("bshv,hvd->bsd", out, p["wo"]), None
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_defs(cfg, d_ff=None, ff_axis="ff"):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    d = {"wo": ParamDef((F, D), (ff_axis, "embed"))}
+    d["wi"] = ParamDef((D, F), ("embed", ff_axis))
+    if gated:
+        d["wg"] = ParamDef((D, F), ("embed", ff_axis))
+    return d
+
+
+def apply_mlp(p, x, cfg):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wg"])) * h
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wg"])) * h
+    elif cfg.act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch, grouped)
+# --------------------------------------------------------------------------
+
+def moe_defs(cfg):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    e_ax = "experts_dp" if cfg.ep_over_dp else "experts"
+    d = {
+        "router": ParamDef((D, E), ("embed", None), dtype=jnp.float32, init="small",
+                           scale=0.02),
+        "wi": ParamDef((E, D, F), (e_ax, "embed", "moe_ff")),
+        "wg": ParamDef((E, D, F), (e_ax, "embed", "moe_ff")),
+        "wo": ParamDef((E, F, D), (e_ax, "moe_ff", "embed")),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.moe_d_ff * cfg.n_shared_experts
+        d["shared"] = mlp_defs(cfg, d_ff=Fs, ff_axis="ff")
+    return d
+
+
+def apply_moe(p, x, cfg):
+    """x: [B,S,D].  Returns (y, aux_loss).
+
+    GShard-style capacity dispatch with BATCH-LOCAL groups: groups are
+    sequence chunks *within* each (data-sharded) batch row, so the scan
+    over groups never slices a sharded axis.  (Perf iter 1: the previous
+    flat [T]->groups reshape put the group axis over 'data', and lax.map
+    over it emitted an all-gather + all-reduce per group x layer --
+    186k/310k collectives on kimi train_4k.)
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    g = min(cfg.moe_group_size, S)
+    nG = -(-S // g)
+    xs = x
+    if nG * g != S:
+        xs = jnp.pad(x, ((0, 0), (0, nG * g - S), (0, 0)))
+    xg = xs.reshape(B, nG, g, D).swapaxes(0, 1)             # [nG, B, g, D]
+    C = max(int(g * k * cfg.capacity_factor / E), 4)
+
+    logits = jnp.einsum("Gbgd,de->Gbge", xg.astype(f32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)           # [nG,B,g,k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean((0, 1, 2))
+    ce = jax.nn.one_hot(gate_idx[..., 0], E).mean((0, 1, 2))
+    aux = E * jnp.sum(me * ce)
+
+    def per_group(carry, inp):
+        xg_i, idx_i, val_i = inp                            # [B,g,D],[B,g,k]
+        xg_i = constrain(xg_i, "batch", None, None)
+        onehot = jax.nn.one_hot(idx_i, E, dtype=f32)        # [B,g,k,E]
+        pos = jnp.cumsum(onehot.reshape(B, g * k, E), 1).reshape(
+            B, g, k, E) - 1.0
+        keep = (pos < C) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=f32) \
+            * keep[..., None]                               # [B,g,k,E,C]
+        dispatch = pos_oh.sum(2).astype(x.dtype)            # [B,g,E,C]
+        combine = (pos_oh * val_i[..., None, None]).sum(2)  # [B,g,E,C]
+        expert_in = jnp.einsum("bgec,bgd->becd", dispatch,
+                               xg_i)                        # [B,E,C,D]
+        # expert-parallel placement (key grouping on experts); this is where
+        # GSPMD inserts the dispatch all-to-all.  ep_over_dp: one expert per
+        # chip -- weights never move, tokens do.
+        if cfg.ep_over_dp:
+            expert_in = constrain(expert_in, None, "experts_dp", None, None)
+        else:
+            expert_in = constrain(expert_in, "batch", "experts", None, None)
+        h = jnp.einsum("becd,edf->becf", expert_in, p["wi"])
+        hg = jnp.einsum("becd,edf->becf", expert_in, p["wg"])
+        h = jax.nn.silu(hg) * h
+        eo = jnp.einsum("becf,efd->becd", h, p["wo"])
+        if cfg.ep_over_dp:
+            eo = constrain(eo, None, "experts_dp", None, None)
+        else:
+            eo = constrain(eo, "batch", "experts", None, None)
+        y = jnp.einsum("bgec,becd->bgd", combine.astype(f32),
+                       eo.astype(f32)).astype(x.dtype)
+        return carry, y
+
+    _, ys = jax.lax.scan(per_group, 0, (xg, gate_idx, gate_vals))
+    y = ys.swapaxes(0, 1).reshape(B, nG * g, D)[:, :S]
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(p["shared"], x, cfg)
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 block (chunked selective scan)
+# --------------------------------------------------------------------------
+
+def mamba_defs(cfg):
+    D, dI, N, R, Kc = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.ssm_dt_rank, cfg.ssm_conv)
+    return {
+        "in_proj": ParamDef((D, 2 * dI), ("embed", "d_inner")),
+        "conv_w": ParamDef((Kc, dI), ("conv", "d_inner"), scale=0.2),
+        "conv_b": ParamDef((dI,), ("d_inner",), init="zeros"),
+        "x_proj": ParamDef((dI, R + 2 * N), ("d_inner", None)),
+        "dt_proj": ParamDef((R, dI), (None, "d_inner")),
+        "dt_bias": ParamDef((dI,), ("d_inner",), init="zeros", dtype=jnp.float32),
+        "A_log": ParamDef((dI, N), ("d_inner", "state"), init="ones",
+                          dtype=jnp.float32),
+        "D": ParamDef((dI,), ("d_inner",), init="ones", dtype=jnp.float32),
+        "out_proj": ParamDef((dI, D), ("d_inner", "embed")),
+    }
+
+
+def _causal_depthwise_conv(x, w, b, state=None):
+    """x: [B,S,C]; w: [K,C].  state: [B,K-1,C] rolling buffer for decode."""
+    K = w.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], 1)  # [B,K-1+S,C]
+        new_state = xin[:, -(K - 1):]
+        y = sum(xin[:, i : i + x.shape[1]] * w[i] for i in range(K))
+        return y + b, new_state
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return y + b, None
+
+
+def apply_mamba(p, x, cfg, *, cache=None):
+    """Mamba-1.  cache: {"conv": [B,K-1,dI], "ssm": [B,dI,N]} for decode."""
+    B, S, D = x.shape
+    dI, N, R = cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    u = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = jnp.split(u, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_depthwise_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    proj = jnp.einsum("bse,ef->bsf", xi, p["x_proj"]).astype(f32)
+    dt, Bm, Cm = proj[..., :R], proj[..., R : R + N], proj[..., R + N :]
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt, p["dt_proj"].astype(f32))
+                         + p["dt_bias"])                    # [B,S,dI]
+    A = -jnp.exp(p["A_log"])                                 # [dI,N]
+    xif = xi.astype(f32)
+
+    if cache is not None:  # decode: single step
+        dA = jnp.exp(dt[:, 0, :, None] * A)                  # [B,dI,N]
+        dBx = dt[:, 0, :, None] * Bm[:, 0, None, :] * xif[:, 0, :, None]
+        h = cache["ssm"] * dA + dBx
+        y = jnp.einsum("ben,bn->be", h, Cm[:, 0]) + p["D"] * xif[:, 0]
+        y = y[:, None].astype(x.dtype)
+        new_cache = {"conv": new_conv, "ssm": h}
+        y = y * jax.nn.silu(z)
+        return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), new_cache
+
+    # train/prefill: chunked associative scan over sequence
+    xif_res = xif  # pre-padding copy for the D-skip connection
+    c = min(cfg.ssm_chunk, S)
+    nC = -(-S // c)
+    pad = nC * c - S
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        xif = jnp.pad(xif, ((0, 0), (0, pad), (0, 0)))
+    dt_c = dt.reshape(B, nC, c, dI)
+    B_c = Bm.reshape(B, nC, c, N)
+    C_c = Cm.reshape(B, nC, c, N)
+    x_c = xif.reshape(B, nC, c, dI)
+
+    def chunk_step(h0, inp):
+        dtc, bc, cc, xc = inp  # [B,c,dI],[B,c,N],[B,c,N],[B,c,dI]
+        dA = jnp.exp(dtc[..., None] * A)                     # [B,c,dI,N]
+        dBx = dtc[..., None] * bc[:, :, None, :] * xc[..., None]
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+        aa, hh = jax.lax.associative_scan(comb, (dA, dBx), axis=1)
+        hh = hh + aa * h0[:, None]
+        y = jnp.einsum("bcen,bcn->bce", hh, cc)
+        return hh[:, -1], y
+
+    h0 = jnp.zeros((B, dI, N), f32)
+    _, ys = jax.lax.scan(chunk_step, h0,
+                         (dt_c.swapaxes(0, 1), B_c.swapaxes(0, 1),
+                          C_c.swapaxes(0, 1), x_c.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, nC * c, dI)[:, :S]
+    y = y + p["D"] * xif_res
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), None
+
+
+# --------------------------------------------------------------------------
+# RG-LRU block (recurrentgemma temporal mixing)
+# --------------------------------------------------------------------------
+
+RG_C = 8.0
+
+
+def rglru_defs(cfg):
+    D, R, Kc = cfg.d_model, cfg.d_rnn, 4
+    return {
+        "w_y": ParamDef((D, R), ("embed", "d_rnn")),
+        "w_x": ParamDef((D, R), ("embed", "d_rnn")),
+        "conv_w": ParamDef((Kc, R), ("conv", "d_rnn"), scale=0.2),
+        "conv_b": ParamDef((R,), ("d_rnn",), init="zeros"),
+        "w_a": ParamDef((R, R), ("d_rnn", None)),
+        "b_a": ParamDef((R,), ("d_rnn",), init="zeros", dtype=jnp.float32),
+        "w_i": ParamDef((R, R), ("d_rnn", None)),
+        "b_i": ParamDef((R,), ("d_rnn",), init="zeros", dtype=jnp.float32),
+        "lam": ParamDef((R,), ("d_rnn",), init="ones", dtype=jnp.float32),
+        "w_out": ParamDef((R, D), ("d_rnn", "embed")),
+    }
+
+
+def apply_rglru(p, x, cfg, *, cache=None):
+    """RG-LRU recurrent block.  cache: {"conv": [B,3,R], "h": [B,R]}."""
+    B, S, _ = x.shape
+    ygate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_y"]))
+    xr = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    conv_state = cache["conv"] if cache is not None else None
+    xr, new_conv = _causal_depthwise_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+
+    xf = xr.astype(f32)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xf, p["w_a"].astype(f32)) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", xf, p["w_i"].astype(f32)) + p["b_i"])
+    log_a = RG_C * r * jax.nn.log_sigmoid(p["lam"])          # [B,S,R] (<0)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+
+    if cache is not None:  # decode
+        h = a[:, 0] * cache["h"] + gated[:, 0]
+        y = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+        _, y = jax.lax.associative_scan(comb, (a, gated), axis=1)
+        new_cache = None
+    out = (y.astype(x.dtype) * ygate)
+    return jnp.einsum("bsr,rd->bsd", out, p["w_out"]), new_cache

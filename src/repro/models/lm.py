@@ -1,0 +1,506 @@
+"""LanguageModel: assembles the zoo's block types into full architectures.
+
+Families:
+  dense / vlm    -- scan over identical (attn + mlp) blocks
+  moe            -- leading dense blocks + scan over (attn + MoE) blocks
+  ssm            -- scan over mamba-1 blocks
+  hybrid         -- scan over (rec, rec, local-attn) super-blocks + rec tail
+  audio          -- whisper-style encoder-decoder
+
+All stacks use jax.lax.scan over layer-stacked parameters (small HLO, fast
+AOT compile even at 95 layers) with per-layer remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+f32 = jnp.float32
+
+
+def _stack_defs(defs, n: int):
+    """Prepend a 'layers' axis of length n to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=(n, *d.shape), axes=("layers", *d.axes)),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _remat(fn, mode: str):
+    if mode == "layer":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+def sinusoidal_pos_emb(length: int, d: int, dtype=jnp.bfloat16):
+    pos = jnp.arange(length, dtype=f32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=f32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((length, d), f32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+class LanguageModel:
+    """Config-driven functional LM.  Stateless; params/caches are pytrees."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ---------------------------------------------------------------- blocks
+
+    def _mix_defs(self, kind: str):
+        cfg = self.cfg
+        if kind == "attn":
+            return (L.mla_defs(cfg) if cfg.attn_type == "mla"
+                    else L.attention_defs(cfg))
+        if kind == "rec":
+            return L.rglru_defs(cfg)
+        if kind == "mamba":
+            return L.mamba_defs(cfg)
+        raise ValueError(kind)
+
+    def _block_defs(self, kind: str):
+        """kind: dense | moe | mamba | rec | attn_local | enc | dec"""
+        cfg = self.cfg
+        if kind == "mamba":
+            return {"ln1": L.norm_defs(cfg, cfg.d_model),
+                    "mix": L.mamba_defs(cfg)}
+        if kind == "rec":
+            return {"ln1": L.norm_defs(cfg, cfg.d_model),
+                    "mix": L.rglru_defs(cfg),
+                    "ln2": L.norm_defs(cfg, cfg.d_model),
+                    "mlp": L.mlp_defs(cfg)}
+        if kind == "moe":
+            return {"ln1": L.norm_defs(cfg, cfg.d_model),
+                    "mix": self._mix_defs("attn"),
+                    "ln2": L.norm_defs(cfg, cfg.d_model),
+                    "moe": L.moe_defs(cfg)}
+        if kind == "dec":
+            return {"ln1": L.norm_defs(cfg, cfg.d_model),
+                    "mix": L.attention_defs(cfg),
+                    "lnx": L.norm_defs(cfg, cfg.d_model),
+                    "xattn": L.attention_defs(cfg, cross=True),
+                    "ln2": L.norm_defs(cfg, cfg.d_model),
+                    "mlp": L.mlp_defs(cfg)}
+        # dense / attn_local / enc
+        return {"ln1": L.norm_defs(cfg, cfg.d_model),
+                "mix": self._mix_defs("attn"),
+                "ln2": L.norm_defs(cfg, cfg.d_model),
+                "mlp": L.mlp_defs(cfg)}
+
+    def _apply_block(self, kind, p, x, *, positions=None, cache=None,
+                     enc_out=None, causal=True, window=None):
+        cfg = self.cfg
+        aux = jnp.zeros((), f32)
+        h = L.apply_norm(p["ln1"], x)
+        if kind == "mamba":
+            y, new_cache = L.apply_mamba(p["mix"], h, cfg, cache=cache)
+            return x + y, new_cache, aux
+        if kind == "rec":
+            y, c_mix = L.apply_rglru(p["mix"], h, cfg, cache=cache)
+        elif cfg.attn_type == "mla" and kind in ("dense", "moe"):
+            y, c_mix = L.mla_attention(p["mix"], h, cfg, positions=positions,
+                                       cache=cache)
+        else:
+            self_cache = cache["self"] if (cache is not None and kind == "dec") else cache
+            y, c_mix = L.attention(
+                p["mix"], h, cfg, positions=positions, cache=self_cache,
+                causal=causal, window=window)
+        x = x + y
+        if kind == "dec":
+            hx = L.apply_norm(p["lnx"], x)
+            xc = cache["cross"] if cache is not None else None
+            y, _ = L.attention(p["xattn"], hx, cfg, kv_input=enc_out,
+                               cache=xc, causal=False, window=0, is_cross=True)
+            x = x + y
+        h2 = L.apply_norm(p["ln2"], x)
+        if kind == "moe":
+            y, aux = L.apply_moe(p["moe"], h2, cfg)
+        else:
+            y = L.apply_mlp(p["mlp"], h2, cfg)
+        x = x + y
+        if kind == "dec" and cache is not None:
+            c_mix = {"self": c_mix, "cross": cache["cross"]}
+        return x, c_mix, aux
+
+    # ---------------------------------------------------------------- stacks
+
+    def stacks(self) -> list[tuple[str, str, int]]:
+        """[(stack_name, block_kind, n_layers)] in execution order."""
+        cfg = self.cfg
+        if cfg.family == "moe":
+            return [("dense_head", "dense", cfg.n_dense_layers),
+                    ("moe_body", "moe", cfg.n_layers - cfg.n_dense_layers)]
+        if cfg.family == "ssm":
+            return [("body", "mamba", cfg.n_layers)]
+        if cfg.family == "hybrid":
+            unit = len(cfg.block_pattern)
+            n_units = cfg.n_layers // unit
+            tail = cfg.n_layers - n_units * unit
+            out = [("units", "pattern", n_units)]
+            if tail:
+                out.append(("tail", "rec", tail))
+            return out
+        if cfg.family == "audio":
+            return [("encoder", "enc", cfg.n_enc_layers),
+                    ("decoder", "dec", cfg.n_layers)]
+        return [("body", "dense", cfg.n_layers)]  # dense, vlm
+
+    def _pattern_defs(self):
+        """Super-block defs for the hybrid pattern (recurrentgemma)."""
+        cfg = self.cfg
+        return {
+            f"p{i}": self._block_defs("rec" if k == "rec" else "dense")
+            for i, k in enumerate(cfg.block_pattern)
+        }
+
+    def param_defs(self):
+        cfg = self.cfg
+        V, D = cfg.padded_vocab, cfg.d_model
+        defs: dict[str, Any] = {
+            "embed": ParamDef((V, D), ("vocab", "embed"), init="small"),
+            "ln_f": L.norm_defs(cfg, D),
+        }
+        if not cfg.tie_embeddings:
+            defs["lm_head"] = ParamDef((D, V), ("embed", "vocab"), init="small")
+        if cfg.learned_pos_emb:
+            defs["pos_emb"] = ParamDef((32_768, D), (None, "embed"), init="small")
+        for name, kind, n in self.stacks():
+            block = self._pattern_defs() if kind == "pattern" else self._block_defs(kind)
+            defs[name] = _stack_defs(block, n)
+        if cfg.is_encoder_decoder:
+            defs["ln_enc"] = L.norm_defs(cfg, D)
+        return defs
+
+    # ---------------------------------------------------------------- caches
+
+    def _block_cache_defs(self, kind: str, B: int, S: int, enc_len: int = 0):
+        cfg = self.cfg
+        bf = jnp.bfloat16
+        if kind in ("dense", "moe") and cfg.attn_type == "mla":
+            return {"ckv": ParamDef((B, S, cfg.kv_lora_rank),
+                                    ("batch", "kv_seq", "kv_lora"), init="zeros", dtype=bf),
+                    "kr": ParamDef((B, S, cfg.rope_head_dim),
+                                   ("batch", "kv_seq", None), init="zeros", dtype=bf)}
+        if kind in ("dense", "moe", "enc"):
+            K, hd = cfg.kv_heads_padded, cfg.head_dim
+            return {"k": ParamDef((B, S, K, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+                                  init="zeros", dtype=bf),
+                    "v": ParamDef((B, S, K, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+                                  init="zeros", dtype=bf)}
+        if kind == "attn_local":
+            K, hd = cfg.kv_heads_padded, cfg.head_dim
+            W = min(cfg.window or S, S)
+            return {"k": ParamDef((B, W, K, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+                                  init="zeros", dtype=bf),
+                    "v": ParamDef((B, W, K, hd), ("batch", "kv_seq", "kv_heads", "head_dim"),
+                                  init="zeros", dtype=bf)}
+        if kind == "mamba":
+            return {"conv": ParamDef((B, cfg.ssm_conv - 1, cfg.d_inner),
+                                     ("batch", None, "d_inner"), init="zeros", dtype=bf),
+                    "ssm": ParamDef((B, cfg.d_inner, cfg.ssm_state),
+                                    ("batch", "d_inner", "state"), init="zeros", dtype=f32)}
+        if kind == "rec":
+            return {"conv": ParamDef((B, 3, cfg.d_rnn),
+                                     ("batch", None, "d_rnn"), init="zeros", dtype=bf),
+                    "h": ParamDef((B, cfg.d_rnn), ("batch", "d_rnn"),
+                                  init="zeros", dtype=f32)}
+        if kind == "dec":
+            K, hd = cfg.kv_heads_padded, cfg.head_dim
+            self_c = {"k": ParamDef((B, S, K, hd),
+                                    ("batch", "kv_seq", "kv_heads", "head_dim"),
+                                    init="zeros", dtype=bf),
+                      "v": ParamDef((B, S, K, hd),
+                                    ("batch", "kv_seq", "kv_heads", "head_dim"),
+                                    init="zeros", dtype=bf)}
+            cross = {"k": ParamDef((B, enc_len, K, hd),
+                                   ("batch", "kv_seq", "kv_heads", "head_dim"),
+                                   init="zeros", dtype=bf),
+                     "v": ParamDef((B, enc_len, K, hd),
+                                   ("batch", "kv_seq", "kv_heads", "head_dim"),
+                                   init="zeros", dtype=bf)}
+            return {"self": self_c, "cross": cross}
+        raise ValueError(kind)
+
+    def cache_defs(self, B: int, S: int):
+        """Decode-time cache declaration (use abstract_params / init_params)."""
+        cfg = self.cfg
+        enc_len = S if cfg.is_encoder_decoder else 0
+        out: dict[str, Any] = {}
+        for name, kind, n in self.stacks():
+            if kind == "enc":
+                continue  # encoder is not re-run at decode time
+            if kind == "pattern":
+                blk = {f"p{i}": self._block_cache_defs(
+                           "attn_local" if k != "rec" else "rec", B, S)
+                       for i, k in enumerate(cfg.block_pattern)}
+            else:
+                k = kind
+                if kind == "dense" and cfg.window:
+                    k = "attn_local"
+                blk = self._block_cache_defs(k, B, S, enc_len)
+            out[name] = _stack_defs(blk, n)
+        return out
+
+    # ---------------------------------------------------------------- forward
+
+    def _embed(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.apply_norm(params["ln_f"], x)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head).astype(f32)
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+            logits = jnp.where(pad_mask, logits, -1e30)
+        return logits
+
+    def _run_stack(self, name, kind, n, params, x, *, positions, caches=None,
+                   enc_out=None, causal=True, index=None):
+        """Scan a stack; returns (x, new_caches, aux_sum).
+
+        `index`: decode-time absolute position scalar; attached to each
+        layer's cache slice inside the scan body (scalars cannot live in
+        the scanned-over pytree)."""
+        cfg = self.cfg
+        p_stack = params[name]
+        c_stack = None if caches is None else caches.get(name)
+
+        def body(carry, xs):
+            h, aux = carry
+            # pin the batch sharding inside the scan body: GSPMD does not
+            # reliably propagate it through loop carries (see sharding.py).
+            # seq_parallel additionally shards the seq axis over 'model' at
+            # layer boundaries (remat residuals shrink by the TP degree;
+            # GSPMD inserts the Megatron-SP all-gather/reduce-scatter pair)
+            if cfg.seq_parallel and h.shape[1] > 1:
+                h = constrain(h, "batch", "kv_seq", None)
+            else:
+                h = constrain(h, "batch", None, None)
+            if c_stack is None:
+                pl = xs
+                cl = None
+            else:
+                pl, cl = xs
+                cl = self._attach_index(cl, index)
+            if kind == "pattern":
+                new_cl = {} if cl is not None else None
+                for i, k in enumerate(cfg.block_pattern):
+                    bk = "rec" if k == "rec" else "dense"
+                    ci = cl[f"p{i}"] if cl is not None else None
+                    h, nc, a = self._apply_block(
+                        bk, pl[f"p{i}"], h, positions=positions, cache=ci,
+                        window=(cfg.window if k != "rec" else None))
+                    if new_cl is not None:
+                        new_cl[f"p{i}"] = self._strip_index(nc)
+                    aux = aux + a
+                return (h, aux), new_cl
+            h, nc, a = self._apply_block(
+                kind, pl, h, positions=positions, cache=cl, enc_out=enc_out,
+                causal=causal,
+                window=(0 if kind in ("enc", "dec") else None))
+            return (h, aux + a), self._strip_index(nc)
+
+        body = _remat(body, cfg.remat if caches is None else "none")
+        xs = p_stack if c_stack is None else (p_stack, c_stack)
+        (x, aux), new_c = jax.lax.scan(body, (x, jnp.zeros((), f32)), xs)
+        return x, new_c, aux
+
+    def forward(self, params, tokens, *, frontend_embeds=None, enc_embeds=None):
+        """Full-sequence forward returning (logits, aux)."""
+        hidden, aux = self.forward_hidden(
+            params, tokens, frontend_embeds=frontend_embeds,
+            enc_embeds=enc_embeds)
+        return self._logits(params, hidden), aux
+
+    def forward_hidden(self, params, tokens, *, frontend_embeds=None,
+                       enc_embeds=None):
+        """Full-sequence forward (train/prefill, no cache) up to the final
+        hidden state.
+
+        tokens: [B, S_text] int32.
+        frontend_embeds: [B, n_front, D] (vlm patch stub) prepended.
+        enc_embeds: [B, S_enc, D] (audio frames stub) for enc-dec.
+        Returns (hidden [B, S_total, D], aux_loss).
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if frontend_embeds is not None:
+            x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], 1)
+        if cfg.learned_pos_emb:
+            x = x + params["pos_emb"][: x.shape[1]]
+        x = constrain(x, "batch", None, None)
+        positions = jnp.arange(x.shape[1])[None]
+        aux_total = jnp.zeros((), f32)
+
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            e = enc_embeds.astype(x.dtype)
+            e = e + sinusoidal_pos_emb(e.shape[1], cfg.d_model, e.dtype)
+            e, _, _ = self._run_stack("encoder", "enc", cfg.n_enc_layers,
+                                      params, e, positions=jnp.arange(e.shape[1])[None],
+                                      causal=False)
+            enc_out = L.apply_norm(params["ln_enc"], e)
+
+        for name, kind, n in self.stacks():
+            if kind == "enc":
+                continue
+            x, _, aux = self._run_stack(name, kind, n, params, x,
+                                        positions=positions, enc_out=enc_out)
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    def decode_step(self, params, cache, token, index):
+        """One decode step.  token: [B,1] int32; index: scalar int32 position.
+
+        cache layout matches cache_defs(); cross caches (enc-dec) must be
+        pre-filled.  Returns (logits [B,1,V], new_cache).
+        """
+        cfg = self.cfg
+        x = self._embed(params, token)
+        if cfg.learned_pos_emb:
+            x = x + jax.lax.dynamic_slice_in_dim(params["pos_emb"], index, 1, 0)
+        positions = jnp.full((1, 1), index, jnp.int32)
+        new_caches = {}
+        for name, kind, n in self.stacks():
+            if kind == "enc":
+                continue
+            x, new_c, _ = self._run_stack(
+                name, kind, n, params, x, positions=positions,
+                caches={name: cache[name]}, enc_out=None, index=index)
+            new_caches[name] = new_c
+        return self._logits(params, x), new_caches
+
+    def encode(self, params, enc_embeds):
+        """Run the encoder stack (enc-dec only) -> enc_out [B,S,D]."""
+        cfg = self.cfg
+        e = enc_embeds.astype(jnp.bfloat16)
+        e = e + sinusoidal_pos_emb(e.shape[1], cfg.d_model, e.dtype)
+        e, _, _ = self._run_stack("encoder", "enc", cfg.n_enc_layers, params,
+                                  e, positions=jnp.arange(e.shape[1])[None],
+                                  causal=False)
+        return L.apply_norm(params["ln_enc"], e)
+
+    def fill_cross_cache(self, params, enc_embeds, cache):
+        """Precompute the decoder's cross-attention K/V from the encoder
+        output and write them into `cache` (enc-dec serving prefill)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, enc_embeds)
+        xattn = params["decoder"]["xattn"]          # stacked [L, ...]
+
+        def per_layer(p):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+            if cfg.qkv_bias:
+                k, v = k + p["bk"], v + p["bv"]
+            return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+
+        kv = jax.vmap(per_layer)(xattn)             # [L,B,T,K,hd]
+        cache = dict(cache)
+        dec = dict(cache["decoder"])
+        T = enc_out.shape[1]
+        cross = dec["cross"]
+        dec["cross"] = {
+            "k": jax.lax.dynamic_update_slice(
+                cross["k"], kv["k"].astype(cross["k"].dtype), (0, 0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cross["v"], kv["v"].astype(cross["v"].dtype), (0, 0, 0, 0, 0)),
+        }
+        cache["decoder"] = dec
+        return cache
+
+    # -- cache index plumbing: attach the scalar write position per layer ----
+
+    def _attach_index(self, node, index):
+        if node is None or index is None:
+            return node
+        if isinstance(node, dict):
+            if "k" in node and "index" not in node:
+                return {**node, "index": index}
+            if "ckv" in node and "index" not in node:
+                return {**node, "index": index}
+            if "self" in node:  # dec block: self + fixed cross cache
+                return {"self": self._attach_index(node["self"], index),
+                        "cross": node["cross"]}
+            return {k: self._attach_index(v, index) for k, v in node.items()}
+        return node
+
+    def _strip_index(self, node):
+        if isinstance(node, dict):
+            return {k: self._strip_index(v) for k, v in node.items()
+                    if k not in ("index", "length")}
+        return node
+
+    # ---------------------------------------------------------------- loss
+
+    def loss(self, params, batch):
+        """Causal LM loss.  batch: {"tokens": [B,S]} (+ frontend/enc stubs).
+
+        Written gather-free over the vocab axis: cross entropy =
+        logsumexp(logits) - <x, head[:, tgt]>.  The logsumexp reduces the
+        vocab(model)-sharded logits with one small all-reduce; the target
+        logit is recomputed from the final hidden state and a [B,S,D]
+        gather of head COLUMNS -- never indexing the [B,S,V] tensor, which
+        would force GSPMD to all-gather full logits per device.
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        hidden, aux = self.forward_hidden(
+            params, tokens,
+            frontend_embeds=batch.get("patch_embeds"),
+            enc_embeds=batch.get("frame_embeds"),
+        )
+        n_front = cfg.n_frontend_tokens if cfg.frontend == "patch_stub" else 0
+        x = L.apply_norm(params["ln_f"], hidden)[:, n_front:][:, :-1]
+        tgt = tokens[:, 1:]
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        B, S, D = x.shape
+        c = min(1024, S)
+        nc = -(-S // c)
+        pad = nc * c - S
+        w = jnp.pad(jnp.ones((B, S), f32), ((0, 0), (0, pad)))
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        tp = jnp.pad(tgt, ((0, 0), (0, pad)))
+        pad_mask = (jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+                    if cfg.padded_vocab != cfg.vocab_size else None)
+
+        def chunk_nll(args):
+            xc, tc, wc = args                               # [B,c,D],[B,c],[B,c]
+            xc = constrain(xc, "batch", None, None)
+            logits = jnp.einsum("bsd,dv->bsv", xc, head).astype(f32)
+            logits = constrain(logits, "batch", None, "vocab")
+            if pad_mask is not None:
+                logits = jnp.where(pad_mask, logits, -1e30)
+            lse = jax.nn.logsumexp(logits, axis=-1)         # [B,c]
+            cols = jnp.take(head, tc, axis=1)               # [D,B,c]
+            tl = jnp.einsum("bsd,dbs->bs", xc.astype(f32), cols.astype(f32))
+            return ((lse - tl) * wc).sum()
+
+        chunk_nll = jax.checkpoint(chunk_nll)
+
+        def body(tot, args):
+            return tot + chunk_nll(args), None
+
+        xs = (xp.reshape(B, nc, c, D).swapaxes(0, 1),
+              tp.reshape(B, nc, c).swapaxes(0, 1),
+              w.reshape(B, nc, c).swapaxes(0, 1))
+        total, _ = jax.lax.scan(body, jnp.zeros((), f32), xs)
+        return total / (B * S) + 0.01 * aux

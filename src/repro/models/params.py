@@ -1,0 +1,115 @@
+"""Parameter metadata: declare-then-materialize.
+
+Every model in the zoo declares its parameters as a pytree of ``ParamDef``
+leaves (shape + logical axes + initializer).  The same declaration serves
+three consumers:
+
+  * ``init_params``      -- materialize real arrays (tests, examples, training)
+  * ``abstract_params``  -- ShapeDtypeStructs, zero allocation (dry-run AOT)
+  * ``param_shardings``  -- NamedShardings via the ShardingPolicy
+
+This mirrors the paper's split between *model aggregator* (thin, routing
+metadata) and *local statistics* (the bulk state, sharded by key grouping):
+the declaration is the aggregator-side description; the sharded arrays are
+the distributed statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import param_spec
+from jax.sharding import NamedSharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | lecun | small
+    dtype: Any = jnp.bfloat16
+    scale: float | None = None    # overrides fan-in scaling when set
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _fan_in(d: ParamDef) -> int:
+    if len(d.shape) <= 1:
+        return d.shape[0] if d.shape else 1
+    # contract over all but the last axis by convention [in..., out]
+    return int(np.prod(d.shape[:-1]))
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize a pytree of ParamDef into arrays, splitting `key`."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, d.dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, d.dtype)
+        else:
+            std = d.scale if d.scale is not None else 1.0 / math.sqrt(max(_fan_in(d), 1))
+            if d.init == "small":
+                std = d.scale if d.scale is not None else 0.02
+            arr = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(d.dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree -- no allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=_is_def
+    )
+
+
+def param_specs(defs, mesh, *, fsdp: bool = True, tp: bool = True):
+    return jax.tree.map(
+        lambda d: param_spec(d.shape, d.axes, mesh, fsdp=fsdp, tp=tp),
+        defs,
+        is_leaf=_is_def,
+    )
+
+
+def param_shardings(defs, mesh, *, fsdp: bool = True, tp: bool = True):
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, param_spec(d.shape, d.axes, mesh, fsdp=fsdp, tp=tp)),
+        defs,
+        is_leaf=_is_def,
+    )
+
+
+def abstract_with_sharding(defs, mesh, *, fsdp: bool = True, tp: bool = True):
+    """ShapeDtypeStructs carrying shardings -- feed directly to .lower()."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            d.shape,
+            d.dtype,
+            sharding=NamedSharding(
+                mesh, param_spec(d.shape, d.axes, mesh, fsdp=fsdp, tp=tp)
+            ),
+        ),
+        defs,
+        is_leaf=_is_def,
+    )
+
+
+def count_params(defs) -> int:
+    return sum(
+        int(np.prod(d.shape))
+        for d in jax.tree.leaves(defs, is_leaf=_is_def)
+    )

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, apply_updates, global_norm_clip
+from repro.optim.schedule import cosine_schedule
+
+__all__ = ["AdamW", "apply_updates", "global_norm_clip", "cosine_schedule"]

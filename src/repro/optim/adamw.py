@@ -1,0 +1,148 @@
+"""AdamW with optional fp32 master weights and int8 block-quantized moments.
+
+The int8 moments are the "distributed-optimization trick" analogue of the
+paper's memory argument: VHT keeps ONE copy of every statistic; we keep one
+*sharded* copy of optimizer state (ZeRO via the FSDP sharding pass) and
+optionally compress it 4x (blockwise int8 with per-block fp32 scales), which
+is what lets the 671B/1T MoEs fit the 512-chip mesh (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+BLOCK = 256
+
+
+# ----------------------------- int8 block quantization ----------------------
+
+def _pad_to_block(x):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), n
+
+
+def quantize(x):
+    """x fp32 -> {"q": int8, "s": fp32 per-block max}.
+
+    Nonlinear (sqrt) dynamic mapping, bitsandbytes-style: linear int8 has
+    catastrophic RELATIVE error for near-zero elements sharing a block with
+    a large one (Adam updates divide by sqrt(v), amplifying it).  Mapping
+    q = 127*sign(x)*sqrt(|x|/max) gives ~2x better small-value resolution.
+    """
+    blocks, n = _pad_to_block(x)
+    s = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    norm = blocks / jnp.maximum(s, 1e-20)
+    q = jnp.round(127.0 * jnp.sign(norm) * jnp.sqrt(jnp.abs(norm)))
+    return {"q": q.astype(jnp.int8), "s": s.astype(f32)}
+
+
+def dequantize(qs, shape):
+    import numpy as np
+    n = int(np.prod(shape))
+    qf = qs["q"].astype(f32) / 127.0
+    blocks = jnp.sign(qf) * jnp.square(qf) * qs["s"]
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+_deq = dequantize
+
+
+# ----------------------------- AdamW ----------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 3e-4                  # float or callable(step)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    master_fp32: bool = True
+    quantize_moments: bool = False
+    grad_clip: float = 1.0
+
+    def init(self, params):
+        def moments(p):
+            z = jnp.zeros(p.shape, f32)
+            if self.quantize_moments:
+                return quantize(z)
+            return z
+
+        state = {
+            "m": jax.tree.map(moments, params),
+            "v": jax.tree.map(moments, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if self.master_fp32:
+            state["master"] = jax.tree.map(lambda p: p.astype(f32), params)
+        return state
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        if self.grad_clip:
+            grads = global_norm_clip(grads, self.grad_clip)
+        bc1 = 1.0 - self.b1 ** step.astype(f32)
+        bc2 = 1.0 - self.b2 ** step.astype(f32)
+
+        def upd(g, m, v, p, master):
+            g = g.astype(f32)
+            if self.quantize_moments:
+                m_f = _deq(m, g.shape)
+                v_f = _deq(v, g.shape)
+            else:
+                m_f, v_f = m, v
+            m_f = self.b1 * m_f + (1 - self.b1) * g
+            v_f = self.b2 * v_f + (1 - self.b2) * jnp.square(g)
+            mh = m_f / bc1
+            vh = v_f / bc2
+            base = master if master is not None else p.astype(f32)
+            new_master = base - lr * (mh / (jnp.sqrt(vh) + self.eps)
+                                      + self.weight_decay * base)
+            new_p = new_master.astype(p.dtype)
+            if self.quantize_moments:
+                m_f, v_f = quantize(m_f), quantize(v_f)
+            return new_p, m_f, v_f, new_master
+
+        masters = state.get("master")
+        leaves_g, tdef = jax.tree.flatten(grads)
+        leaves_m = tdef.flatten_up_to(state["m"])
+        leaves_v = tdef.flatten_up_to(state["v"])
+        leaves_p = jax.tree.leaves(params)
+        leaves_ma = (jax.tree.leaves(masters) if masters is not None
+                     else [None] * len(leaves_p))
+        new_p, new_m, new_v, new_ma = [], [], [], []
+        for g, m, v, p, ma in zip(leaves_g, leaves_m, leaves_v, leaves_p, leaves_ma):
+            a, b, c, d = upd(g, m, v, p, ma)
+            new_p.append(a)
+            new_m.append(b)
+            new_v.append(c)
+            new_ma.append(d)
+        new_state = {
+            "m": jax.tree.unflatten(tdef, new_m),
+            "v": jax.tree.unflatten(tdef, new_v),
+            "step": step,
+        }
+        if masters is not None:
+            new_state["master"] = jax.tree.unflatten(tdef, new_ma)
+        return jax.tree.unflatten(tdef, new_p), new_state
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(f32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm_clip(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(f32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(f32) * scale).astype(g.dtype), grads)

@@ -1,0 +1,3 @@
+from repro.runtime.supervisor import Supervisor, StragglerPolicy, HostStatus
+
+__all__ = ["Supervisor", "StragglerPolicy", "HostStatus"]

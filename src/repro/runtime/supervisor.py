@@ -1,0 +1,158 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, elastic restart.
+
+On a real 1000+ node deployment every host runs this supervisor beside the
+training loop; the coordinator aggregates heartbeats.  Semantics (all
+deterministic and unit-tested; the single-host container exercises them
+through simulated clocks):
+
+  * heartbeat ledger: hosts report (step, wall_time) each step; a host
+    silent for `dead_after` seconds is declared failed;
+  * straggler detection: robust z-score (median/MAD) over per-host step
+    durations; hosts slower than `z_thresh` for `patience` consecutive
+    steps trigger the policy;
+  * StragglerPolicy: REBALANCE (shrink the slow host's data shard),
+    EXCLUDE (drop host, re-mesh to the largest factorizable submesh), or
+    WAIT;
+  * elastic restart: on membership change the supervisor proposes a new
+    (pods, data, model) mesh from the surviving host count; training
+    restores the latest checkpoint with the new shardings
+    (CheckpointManager is mesh-independent) and resumes -- the launcher
+    (launch/train.py) wires this loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+import time
+from collections import defaultdict, deque
+
+
+class HostStatus(enum.Enum):
+    HEALTHY = "healthy"
+    STRAGGLER = "straggler"
+    DEAD = "dead"
+
+
+class StragglerPolicy(enum.Enum):
+    WAIT = "wait"
+    REBALANCE = "rebalance"
+    EXCLUDE = "exclude"
+
+
+@dataclasses.dataclass
+class HostState:
+    last_step: int = -1
+    last_seen: float = 0.0
+    durations: deque = dataclasses.field(default_factory=lambda: deque(maxlen=32))
+    slow_streak: int = 0
+    status: HostStatus = HostStatus.HEALTHY
+
+
+def _median(xs):
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+class Supervisor:
+    def __init__(self, host_ids, *, dead_after: float = 60.0,
+                 z_thresh: float = 3.0, patience: int = 3,
+                 policy: StragglerPolicy = StragglerPolicy.REBALANCE,
+                 clock=time.monotonic):
+        self.hosts = {h: HostState() for h in host_ids}
+        self.dead_after = dead_after
+        self.z_thresh = z_thresh
+        self.patience = patience
+        self.policy = policy
+        self.clock = clock
+        self.events: list[tuple] = []
+
+    # ---------------------------------------------------------- heartbeats
+
+    def heartbeat(self, host, step: int, duration: float | None = None):
+        st = self.hosts[host]
+        now = self.clock()
+        st.last_step = step
+        st.last_seen = now
+        if duration is not None:
+            st.durations.append(duration)
+        if st.status is HostStatus.DEAD:
+            st.status = HostStatus.HEALTHY      # rejoin
+            self.events.append(("rejoin", host, step))
+
+    def sweep(self):
+        """Periodic check: mark dead hosts, detect stragglers.
+
+        Returns a dict of actions: {"dead": [...], "stragglers": [...],
+        "action": StragglerPolicy, "shards": {host: weight}}
+        """
+        now = self.clock()
+        dead, stragglers = [], []
+        for h, st in self.hosts.items():
+            if st.status is not HostStatus.DEAD and \
+               now - st.last_seen > self.dead_after and st.last_seen > 0:
+                st.status = HostStatus.DEAD
+                self.events.append(("dead", h, st.last_step))
+            if st.status is HostStatus.DEAD:
+                dead.append(h)
+
+        durs = {h: _median(st.durations) for h, st in self.hosts.items()
+                if st.durations and st.status is not HostStatus.DEAD}
+        if len(durs) >= 3:
+            med = _median(list(durs.values()))
+            mad = _median([abs(d - med) for d in durs.values()]) or 1e-9
+            for h, d in durs.items():
+                z = 0.6745 * (d - med) / mad
+                st = self.hosts[h]
+                if z > self.z_thresh:
+                    st.slow_streak += 1
+                    if st.slow_streak >= self.patience and \
+                       st.status is HostStatus.HEALTHY:
+                        st.status = HostStatus.STRAGGLER
+                        self.events.append(("straggler", h, st.last_step))
+                else:
+                    st.slow_streak = 0
+                    if st.status is HostStatus.STRAGGLER:
+                        st.status = HostStatus.HEALTHY
+                        self.events.append(("recovered", h, st.last_step))
+                if st.status is HostStatus.STRAGGLER:
+                    stragglers.append(h)
+
+        return {"dead": dead, "stragglers": stragglers,
+                "action": self.policy if (stragglers or dead) else StragglerPolicy.WAIT,
+                "shards": self.rebalanced_shards()}
+
+    # ------------------------------------------------------------ policies
+
+    def rebalanced_shards(self):
+        """Data-shard weights per host inversely proportional to median
+        step time (REBALANCE policy).  Healthy hosts ~1.0."""
+        weights = {}
+        durs = {h: _median(st.durations) if st.durations else None
+                for h, st in self.hosts.items()
+                if st.status is not HostStatus.DEAD}
+        med = _median([d for d in durs.values() if d]) if any(durs.values()) else 1.0
+        for h, d in durs.items():
+            weights[h] = 1.0 if not d else max(min(med / d, 1.0), 0.25)
+        total = sum(weights.values()) or 1.0
+        return {h: w / total * len(weights) for h, w in weights.items()}
+
+    def alive(self):
+        return [h for h, st in self.hosts.items()
+                if st.status is not HostStatus.DEAD]
+
+    def propose_mesh(self, chips_per_host: int, *, model_parallel: int = 16):
+        """Largest (pods, data, model) mesh from surviving hosts (EXCLUDE /
+        elastic path).  Keeps model_parallel fixed (reshaping TP is a
+        different checkpoint topology); shrinks data (and pod) axes."""
+        n = len(self.alive()) * chips_per_host
+        if n < model_parallel:
+            raise RuntimeError("not enough chips for model parallelism")
+        data = n // model_parallel
+        # largest power-of-two data axis (balanced collectives)
+        data = 2 ** int(math.log2(data))
+        if data >= 32:
+            return (2, data // 2, model_parallel), ("pod", "data", "model")
+        return (data, model_parallel), ("data", "model")

@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train step on CPU, asserting output shapes and no NaNs (assignment
+requirement f)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCHS, get_config, get_smoke_config, SHAPES, shape_applicable
+from repro.launch.specs import make_batch
+from repro.launch.steps import make_train_step, make_serve_step
+from repro.models.lm import LanguageModel
+from repro.models.params import init_params, count_params
+from repro.optim.adamw import AdamW
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train(arch):
+    cfg = get_smoke_config(arch)
+    model = LanguageModel(cfg)
+    key = jax.random.PRNGKey(0)
+    params = init_params(model.param_defs(), key)
+    batch = make_batch(cfg, 2, 64, key)
+    logits, aux = jax.jit(model.forward)(
+        params, batch["tokens"],
+        frontend_embeds=batch.get("patch_embeds"),
+        enc_embeds=batch.get("frame_embeds"))
+    assert logits.shape[0] == 2
+    assert logits.shape[-1] == cfg.padded_vocab
+    assert not bool(jnp.isnan(logits).any())
+
+    opt = AdamW(lr=1e-3)
+    ts = jax.jit(make_train_step(cfg, opt))
+    st = opt.init(params)
+    p2, st2, m1 = ts(params, st, batch)
+    _, _, m2 = ts(p2, st2, batch)
+    assert not bool(jnp.isnan(m1["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"])   # learning on repeat batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = LanguageModel(cfg)
+    key = jax.random.PRNGKey(0)
+    params = init_params(model.param_defs(), key)
+    cache = init_params(model.cache_defs(2, 64), key)
+    ss = jax.jit(make_serve_step(cfg))
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for i in (62, 63):
+        tok, cache = ss(params, cache, tok, jnp.int32(i))
+    assert tok.shape == (2, 1)
+    assert int(tok.min()) >= 0 and int(tok.max()) < cfg.padded_vocab
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_declares(arch):
+    """FULL configs are exercised via the dry-run only; here we check the
+    parameter DECLARATION (no allocation) and rough scale."""
+    cfg = get_config(arch)
+    n = cfg.n_params()
+    expected = {
+        "recurrentgemma_9b": (7e9, 13e9),
+        "deepseek_v3_671b": (600e9, 740e9),
+        "kimi_k2_1t_a32b": (900e9, 1.2e12),
+        "qwen15_4b": (3e9, 5e9),
+        "yi_34b": (30e9, 40e9),
+        "deepseek_67b": (60e9, 75e9),
+        "minitron_4b": (3.5e9, 6e9),
+        "falcon_mamba_7b": (6e9, 9e9),
+        "internvl2_2b": (1.5e9, 3e9),
+        "whisper_medium": (0.6e9, 1.2e9),
+    }[arch]
+    assert expected[0] < n < expected[1], f"{arch}: {n/1e9:.2f}B params"
+    if cfg.n_experts:
+        assert cfg.n_active_params() < 0.1 * n
+
+
+def test_moe_active_params_deepseek():
+    cfg = get_config("deepseek_v3_671b")
+    act = cfg.n_active_params()
+    assert 30e9 < act < 45e9, f"{act/1e9:.1f}B active"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_shape_applicability(arch):
+    applicable = [s for s in SHAPES if shape_applicable(arch, s)]
+    assert "train_4k" in applicable
+    if arch in ("falcon_mamba_7b", "recurrentgemma_9b"):
+        assert "long_500k" in applicable
+    else:
+        assert "long_500k" not in applicable

@@ -1,0 +1,197 @@
+"""AMRules / CluStream / ensembles / change detectors."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.generators import (
+    ElectricityLikeGenerator, WaveformGenerator, RandomTreeGenerator,
+    bin_numeric,
+)
+from repro.ml import clustream, detectors
+from repro.ml.amrules import AMRules, HAMR, RulesConfig, VAMR, coverage, first_cover
+from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
+from repro.ml.htree import TreeConfig
+
+
+# ------------------------------- AMRules ------------------------------------
+
+RC = RulesConfig(n_attrs=12, n_bins=8, max_rules=32, n_min=150)
+
+
+def _reg_stream(gen, n_batches=50, batch=256, n_bins=8):
+    key = jax.random.PRNGKey(1)
+    xs, ys = [], []
+    for _ in range(n_batches):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, batch)
+        xs.append(bin_numeric(x, n_bins))
+        ys.append(y.astype(jnp.float32))
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+def test_amrules_learns_electricity():
+    gen = ElectricityLikeGenerator()
+    xs, ys = _reg_stream(gen)
+    amr = AMRules(RC)
+    st, ms = amr.run(amr.init(), xs, ys)
+    mae = np.asarray(ms["abs_err"]) / np.asarray(ms["seen"])
+    assert mae[-10:].mean() < mae[:5].mean()      # error decreases
+    assert int(st["n_created"]) > 0               # rules were created
+
+
+def test_amrules_ordered_coverage():
+    st = AMRules(RC).init()
+    st = dict(st)
+    st["active"] = st["active"].at[3].set(True).at[7].set(True)
+    st["pred_valid"] = st["pred_valid"].at[3, 0].set(True)
+    st["pred_attr"] = st["pred_attr"].at[3, 0].set(0)
+    st["pred_op"] = st["pred_op"].at[3, 0].set(0)     # attr0 <= 3
+    st["pred_bin"] = st["pred_bin"].at[3, 0].set(3)
+    x = jnp.array([[2] * 12, [5] * 12])
+    cov = coverage(st, x, RC)
+    first = first_cover(cov, RC)
+    assert int(first[0]) == 3                     # ordered: lowest rule id
+    assert int(first[1]) == 7                     # rule 7 has no predicates
+
+
+def test_vamr_delay_matches_amrules_family():
+    gen = WaveformGenerator()
+    xs, ys = _reg_stream(gen, n_batches=40)
+    for cls in (VAMR, lambda rc: HAMR(rc, replicas=2)):
+        learner = cls(dataclasses.replace(RC, n_attrs=40))
+        st, ms = learner.run(learner.init(), xs, ys)
+        mae = np.asarray(ms["abs_err"]) / np.asarray(ms["seen"])
+        assert np.isfinite(mae).all()
+        assert mae[-5:].mean() < mae[:5].mean() + 0.05
+
+
+# ------------------------------ CluStream -----------------------------------
+
+def test_clustream_absorbs_and_macroclusters():
+    cc = clustream.CluStreamConfig(n_dims=4, n_micro=32, n_macro=3,
+                                   period=1000)
+    key = jax.random.PRNGKey(0)
+    centers_true = jnp.array([[0.2] * 4, [0.5] * 4, [0.8] * 4])
+    st = clustream.init_clustream(cc, key)
+    upd = jax.jit(lambda s, x: clustream.update(s, x, cc))
+    for i in range(30):
+        key, k1, k2 = jax.random.split(key, 3)
+        c = jax.random.randint(k1, (128,), 0, 3)
+        x = centers_true[c] + 0.03 * jax.random.normal(k2, (128, 4))
+        st = upd(st, x)
+    macro = clustream.macro_cluster(st, cc, key)
+    # each true center has a macro centroid within 0.1
+    d = jnp.sqrt(((macro[None] - centers_true[:, None]) ** 2).sum(-1)).min(1)
+    assert float(d.max()) < 0.1
+
+
+def test_clustream_merge_shards():
+    cc = clustream.CluStreamConfig(n_dims=4, n_micro=16)
+    key = jax.random.PRNGKey(0)
+    s1 = clustream.init_clustream(cc, key)
+    s2 = clustream.init_clustream(cc, jax.random.PRNGKey(1))
+    merged = clustream.merge([s1, s2])
+    np.testing.assert_allclose(np.asarray(merged["n"]),
+                               np.asarray(s1["n"] + s2["n"]))
+
+
+# ------------------------------ detectors -----------------------------------
+
+def _drift_stream(n=600, flip=300):
+    rng = np.random.RandomState(0)
+    a = rng.binomial(1, 0.1, flip)          # 10% error rate
+    b = rng.binomial(1, 0.45, n - flip)     # drift to 45%
+    return np.concatenate([a, b]).astype(np.float32)
+
+
+@pytest.mark.parametrize("name", ["ph", "ddm", "eddm", "adwin"])
+def test_detectors_fire_on_drift_only(name):
+    xs = _drift_stream()
+    ac = detectors.AdwinConfig()
+    if name == "ph":
+        st, fn = detectors.ph_init(), lambda s, x: detectors.ph_update(s, x, lam=20.0)
+    elif name == "ddm":
+        st, fn = detectors.ddm_init(), detectors.ddm_update
+    elif name == "eddm":
+        st, fn = detectors.eddm_init(), detectors.eddm_update
+    else:
+        st, fn = detectors.adwin_init(ac), lambda s, x: detectors.adwin_update(s, x, ac)
+    fn = jax.jit(fn)
+    fired_at = None
+    for i, x in enumerate(xs):
+        st, drift = fn(st, jnp.float32(x))
+        if bool(drift) and fired_at is None and i > 50:
+            fired_at = i
+    assert fired_at is not None, f"{name} never fired"
+    assert fired_at > 250, f"{name} fired before the drift (at {fired_at})"
+
+
+def test_detector_stationary_quiet():
+    xs = np.random.RandomState(1).binomial(1, 0.1, 500).astype(np.float32)
+    st = detectors.ph_init()
+    fn = jax.jit(lambda s, x: detectors.ph_update(s, x, lam=50.0))
+    fired = False
+    for x in xs:
+        st, drift = fn(st, jnp.float32(x))
+        fired = fired or bool(drift)
+    assert not fired
+
+
+# ------------------------------ ensembles -----------------------------------
+
+def test_ozabag_learns_and_detects():
+    gen = RandomTreeGenerator(n_cat=5, n_num=5, depth=4, seed=5)
+    tc = TreeConfig(n_attrs=10, n_bins=8, n_classes=2, max_nodes=63, n_min=64)
+    ens = OzaEnsemble(EnsembleConfig(tree=tc, n_members=5, detector="adwin"))
+    st = ens.init(jax.random.PRNGKey(0))
+    step = jax.jit(ens.step)
+    key = jax.random.PRNGKey(0)
+    accs = []
+    for i in range(40):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, 128)
+        st, m = step(st, bin_numeric(x, 8), y)
+        accs.append(float(m["correct"]) / float(m["seen"]))
+    assert sum(accs[-10:]) / 10 > sum(accs[:5]) / 5
+
+
+def test_ozaboost_learns():
+    """OzaBoost (paper ref [26] BoostVHT lineage): boosting weights scale
+    with upstream error and the ensemble still learns."""
+    gen = RandomTreeGenerator(n_cat=5, n_num=5, depth=4, seed=11)
+    tc = TreeConfig(n_attrs=10, n_bins=8, n_classes=2, max_nodes=63, n_min=64)
+    ens = OzaEnsemble(EnsembleConfig(tree=tc, n_members=4, boost=True,
+                                     detector="none"))
+    st = ens.init(jax.random.PRNGKey(1))
+    step = jax.jit(ens.step)
+    key = jax.random.PRNGKey(2)
+    accs = []
+    for _ in range(35):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, 128)
+        st, m = step(st, bin_numeric(x, 8), y)
+        accs.append(float(m["correct"]) / float(m["seen"]))
+    assert sum(accs[-10:]) / 10 > sum(accs[:5]) / 5
+
+
+def test_hamr_replica_merge_equals_flat_updates():
+    """HAMR's merged statistics must equal a single-aggregator update on the
+    same instances when no expansion fires (replica split is a pure
+    repartition)."""
+    import numpy as np
+    from repro.ml.amrules import AMRules, HAMR, RulesConfig
+    rc = RulesConfig(n_attrs=6, n_bins=4, max_rules=8, n_min=10**9, delay=1)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (64, 6), 0, 4)
+    y = jax.random.uniform(key, (64,))
+    h = HAMR(rc, replicas=4)
+    a = AMRules(rc)
+    sh, _ = h.step(h.init(), x, y)
+    sa, _ = a.step(a.init(), x, y)
+    np.testing.assert_allclose(np.asarray(sh["d_stats"]["cnt"]),
+                               np.asarray(sa["d_stats"]["cnt"]), atol=1e-4)
+    np.testing.assert_allclose(float(sh["d_n"]), float(sa["d_n"]))

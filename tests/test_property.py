@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hlo_cost import analyze_hlo
+from repro.distributed.sharding import param_spec
+from repro.kernels.split_gain.ref import split_gain_ref
+from repro.kernels.vht_stats.ref import stats_update_ref
+from repro.ml.htree import TreeConfig, init_tree, route, update_stats
+from repro.optim.adamw import dequantize, quantize
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+AXIS_NAMES = [None, "embed", "vocab", "heads", "kv_heads", "ff", "experts",
+              "layers", "batch", "kv_seq", "head_dim", "moe_ff"]
+
+
+@given(st.lists(st.tuples(st.integers(1, 4096),
+                          st.sampled_from(AXIS_NAMES)),
+                min_size=1, max_size=5))
+@settings(max_examples=200, deadline=None)
+def test_param_spec_invariants(dims):
+    """No mesh axis is used twice; every sharded dim divides its axis."""
+    shape = tuple(d for d, _ in dims)
+    axes = tuple(a for _, a in dims)
+    spec = param_spec(shape, axes, MESH)
+    used = []
+    for dim, assignment in zip(shape, spec):
+        if assignment is None:
+            continue
+        parts = assignment if isinstance(assignment, tuple) else (assignment,)
+        size = 1
+        for p in parts:
+            assert p not in used, f"axis {p} used twice in {spec}"
+            used.append(p)
+            size *= MESH.shape[p]
+        assert dim % size == 0, f"dim {dim} not divisible by {size}"
+
+
+@given(st.integers(2, 64), st.integers(1, 8), st.integers(2, 8),
+       st.integers(2, 5), st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_stats_update_conserves_mass(N, m, nb, C, B):
+    """Total added statistics mass == sum of weights x attributes."""
+    key = jax.random.PRNGKey(B)
+    ks = jax.random.split(key, 4)
+    stats = jnp.zeros((N, m, nb, C))
+    leaf = jax.random.randint(ks[0], (B,), 0, N)
+    xbin = jax.random.randint(ks[1], (B, m), 0, nb)
+    y = jax.random.randint(ks[2], (B,), 0, C)
+    w = jax.random.uniform(ks[3], (B,))
+    out = stats_update_ref(stats, leaf, xbin, y, w)
+    np.testing.assert_allclose(float(out.sum()), float(w.sum()) * m, rtol=1e-5)
+
+
+@given(st.integers(2, 16), st.integers(1, 6), st.integers(2, 8),
+       st.integers(2, 5))
+@settings(max_examples=25, deadline=None)
+def test_split_gain_bounded_by_entropy(N, m, nb, C):
+    """Information gain is bounded by log2(C) and invalid cuts are -inf."""
+    key = jax.random.PRNGKey(N * m + nb)
+    stats = jax.random.uniform(key, (N, m, nb, C)) * 7
+    g = split_gain_ref(stats)
+    gv = np.asarray(g)
+    valid = gv > -1e29
+    assert (gv[valid] <= np.log2(C) + 1e-4).all()
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                max_size=600))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_error_bound(xs):
+    """Blockwise int8: |deq(q(x)) - x| <= blockmax/127 elementwise."""
+    x = jnp.asarray(xs, jnp.float32)
+    q = quantize(x)
+    back = dequantize(q, x.shape)
+    from repro.optim.adamw import BLOCK
+    pad = (-len(xs)) % BLOCK
+    xp = np.pad(np.asarray(x), (0, pad)).reshape(-1, BLOCK)
+    bound = np.abs(xp).max(1) / 127.0 * 1.01 + 1e-6
+    err = np.abs(np.pad(np.asarray(back - x), (0, pad))).reshape(-1, BLOCK)
+    assert (err.max(1) <= bound).all()
+
+
+@given(st.integers(0, 1_000_000))
+@settings(max_examples=20, deadline=None)
+def test_route_always_reaches_leaf(seed):
+    """Routing returns a node whose split_attr is -1 (a leaf) on any tree
+    produced by random splits."""
+    tc = TreeConfig(n_attrs=6, n_bins=4, n_classes=2, max_nodes=31, n_min=10)
+    key = jax.random.PRNGKey(seed)
+    state = init_tree(tc)
+    # random valid tree: split root and one child
+    state = dict(state)
+    state["split_attr"] = state["split_attr"].at[0].set(seed % 6)
+    state["split_bin"] = state["split_bin"].at[0].set(seed % 4)
+    state["children"] = state["children"].at[0].set(jnp.array([1, 2]))
+    state["n_nodes"] = jnp.asarray(3, jnp.int32)
+    x = jax.random.randint(key, (32, 6), 0, 4)
+    leaf = route(state, x, tc)
+    assert bool((state["split_attr"][leaf] < 0).all())
+    assert bool((leaf > 0).all())
+
+
+def test_hlo_cost_matmul_exact():
+    M, N, K = 64, 96, 128
+    hlo = jax.jit(lambda a, b: a @ b).lower(
+        jnp.zeros((M, K)), jnp.zeros((K, N))).compile().as_text()
+    c = analyze_hlo(hlo)
+    assert c.flops == 2 * M * N * K
+
+
+def test_hlo_cost_scan_trip_scaling():
+    def g(w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, jnp.ones((8, 64)), None, length=12)
+        return y.sum()
+    hlo = jax.jit(g).lower(jnp.zeros((64, 64))).compile().as_text()
+    c = analyze_hlo(hlo)
+    expected = 12 * (2 * 8 * 64 * 64)
+    assert expected <= c.flops <= expected * 1.2
