@@ -24,10 +24,18 @@ def make_stream(gen, n_batches, batch, n_bins, *, seed=0, classification=True):
     return jnp.stack(xs), jnp.stack(ys)
 
 
+def _init_state(learner):
+    return learner.init(jax.random.PRNGKey(0)) if _wants_key(learner) \
+        else learner.init()
+
+
+def _metric(corr, abse, seen):
+    return corr / seen if corr else abse / seen
+
+
 def run_prequential(learner, xs, ys, *, name=""):
     """Returns (final_acc_or_err, throughput inst/s, wall seconds)."""
-    state = learner.init(jax.random.PRNGKey(0)) if _wants_key(learner) \
-        else learner.init()
+    state = _init_state(learner)
     step = jax.jit(learner.step)
     # warmup/compile
     state2, m = step(state, xs[0], ys[0])
@@ -41,8 +49,25 @@ def run_prequential(learner, xs, ys, *, name=""):
         seen += float(m["seen"])
     jax.block_until_ready(jax.tree.leaves(state)[0])
     dt = time.perf_counter() - t0
-    metric = corr / seen if corr else abse / seen
-    return metric, seen / dt, dt
+    return _metric(corr, abse, seen), seen / dt, dt
+
+
+def run_prequential_scanned(learner, xs, ys):
+    """Whole-stream fused execution: learner.run (jax.lax.scan over the
+    step) compiled once and dispatched once for all micro-batches.
+    Returns (final_acc_or_err, throughput inst/s, wall seconds)."""
+    state = _init_state(learner)
+    compiled = jax.jit(learner.run).lower(state, xs, ys).compile()
+    st, ms = compiled(state, xs, ys)                  # warm execution
+    jax.block_until_ready(jax.tree.leaves(st)[0])
+    t0 = time.perf_counter()
+    st, ms = compiled(state, xs, ys)
+    jax.block_until_ready(jax.tree.leaves(st)[0])
+    dt = time.perf_counter() - t0
+    corr = float(ms["correct"].sum()) if "correct" in ms else 0.0
+    abse = float(ms["abs_err"].sum()) if "abs_err" in ms else 0.0
+    seen = float(ms["seen"].sum())
+    return _metric(corr, abse, seen), seen / dt, dt
 
 
 def _wants_key(learner):

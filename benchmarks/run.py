@@ -1,23 +1,31 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  --full runs paper-scale streams;
-the default fast mode keeps the whole suite CPU-friendly.
+the default fast mode (also spellable --fast, for CI symmetry) keeps the
+whole suite CPU-friendly.  The VHT suite additionally writes its structured
+before/after fig89 numbers to BENCH_vht.json (--bench-json to relocate) so
+the perf trajectory is tracked PR over PR.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only vht|amrules|lm|kernels]
+  PYTHONPATH=src python -m benchmarks.run [--full|--fast] [--only vht|amrules|lm|kernels]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="fast mode (the default; overrides --full)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--bench-json", default="BENCH_vht.json",
+                    help="where to write the structured VHT numbers")
     args = ap.parse_args()
-    fast = not args.full
+    fast = args.fast or not args.full
 
     from benchmarks import amrules_benchmarks, kernel_benchmarks, lm_roofline
     from benchmarks import vht_benchmarks
@@ -38,6 +46,11 @@ def main() -> None:
         except Exception as e:  # keep the harness going, flag the suite
             failures += 1
             print(f"{name}.SUITE_FAILED,0,{type(e).__name__}:{e}", flush=True)
+    if vht_benchmarks.BENCH:
+        with open(args.bench_json, "w") as f:
+            json.dump({"fig89": vht_benchmarks.BENCH, "mode":
+                       "fast" if fast else "full"}, f, indent=2)
+        print(f"wrote {args.bench_json}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -10,16 +10,22 @@ honest measurements of this runtime, not projections.
 from __future__ import annotations
 
 import dataclasses
+import time
+
+import jax
+import numpy as np
 
 from benchmarks.common import (acc_curve, make_stream, run_prequential,
-                               state_bytes)
+                               run_prequential_scanned, state_bytes)
+from repro.core.engines import JitEngine
 from repro.data.generators import (CovtypeLikeGenerator,
                                    ElectricityLikeGenerator,
                                    RandomTreeGenerator, RandomTweetGenerator)
 from repro.ml.htree import TreeConfig
-from repro.ml.vht import VHT, VHTConfig, ShardingEnsemble
+from repro.ml.vht import VHT, VHTConfig, ShardingEnsemble, build_vht_topology
 
 ROWS = []
+BENCH = {}    # structured fig89 before/after numbers -> BENCH_vht.json
 
 
 def emit(name, us_per_call, derived):
@@ -86,26 +92,76 @@ def fig45_parallel_accuracy(fast=True):
              ";".join(f"{k}={v:.3f}" for k, v in results.items()))
 
 
+def _run_topology_scanned(cfg, xs, ys):
+    """Time JitEngine.run_stream (whole-stream scan) on the VHT topology."""
+    topo = build_vht_topology(cfg)
+    eng = JitEngine()
+    payloads = {"x": xs, "y": ys}
+    key = jax.random.PRNGKey(0)
+    eng.run_stream(topo, eng.init(topo, key), payloads)   # compile + warm
+    carry = eng.init(topo, key)
+    t0 = time.perf_counter()
+    carry, outs = eng.run_stream(topo, carry, payloads)
+    jax.block_until_ready(jax.tree.leaves(carry)[0])
+    dt = time.perf_counter() - t0
+    pred = np.asarray(outs["prediction"]["pred"])
+    acc = float((pred == np.asarray(ys)).mean())
+    return acc, ys.size / dt, dt
+
+
 def fig89_speedup(fast=True):
     """Fig. 8/9: throughput of wok vs attribute count; per-shard work model.
 
     Vertical scaling structure: each LS shard holds m/p attribute columns;
     we report measured single-process throughput AND bytes/attr-shard at
-    p in {2,4,8} (what each of p workers would hold/compute)."""
+    p in {2,4,8} (what each of p workers would hold/compute).
+
+    Each arm is measured three ways so the perf trajectory is tracked from
+    this PR on (-> BENCH_vht.json):
+      before      -- pre-PR semantics: per-step jitted loop with host sync
+                     per batch, dense one-hot statistics, ungated splits
+      after       -- fused defaults: whole-stream lax.scan, segment/Pallas
+                     statistics, lax.cond-gated split checks
+      after_topo  -- the same stream through JitEngine.run_stream on the
+                     MA/LS topology (the scanned engine path)
+    """
     n_b = 20 if fast else 60
-    dims = [20, 200] if fast else [20, 200, 1000]
+    dims = [20, 200, 1000]
     for m in dims:
+        nb = n_b if m <= 200 else max(10, n_b // 2)
         half = m // 2
         gen = RandomTreeGenerator(n_cat=half, n_num=m - half, depth=8)
-        xs, ys = make_stream(gen, n_b, 512, 8)
-        v = VHT(VHTConfig(_tc(m, split_delay=4)))
-        acc, thr, dt = run_prequential(v, xs, ys)
+        xs, ys = make_stream(gen, nb, 512, 8)
+        tc_before = _tc(m, split_delay=4, stats_impl="onehot",
+                        gate_splits=False)
+        acc0, thr0, dt0 = run_prequential(VHT(VHTConfig(tc_before)), xs, ys)
+        cfg_after = VHTConfig(_tc(m, split_delay=4))
+        acc1, thr1, dt1 = run_prequential_scanned(VHT(cfg_after), xs, ys)
+        acc2, thr2, dt2 = _run_topology_scanned(cfg_after, xs, ys)
+        v = VHT(cfg_after)
         st = v.init()
         total = state_bytes(st)
         shard = {p: state_bytes({"stats": st["stats"][:, : m // p]})
                  for p in (2, 4, 8)}
-        emit(f"fig89.speedup.dense-{m}", dt / n_b * 1e6,
-             f"thr={thr:.0f}/s;state={total/2**20:.1f}MiB;"
+        BENCH[f"dense-{m}"] = {
+            "n_batches": int(nb), "batch": int(ys.shape[1]),
+            "before": {"us_per_batch": dt0 / nb * 1e6, "inst_per_s": thr0,
+                       "acc": acc0,
+                       "path": "per-step loop, one-hot stats, ungated"},
+            "after": {"us_per_batch": dt1 / nb * 1e6, "inst_per_s": thr1,
+                      "acc": acc1,
+                      "path": "lax.scan stream, segment stats, gated"},
+            "after_topology_scan": {
+                "us_per_batch": dt2 / nb * 1e6, "inst_per_s": thr2,
+                "acc": acc2,
+                "path": "JitEngine.run_stream on MA/LS topology"},
+            "speedup": dt0 / dt1,
+            "speedup_topology": dt0 / dt2,
+        }
+        emit(f"fig89.speedup.dense-{m}", dt1 / nb * 1e6,
+             f"thr={thr1:.0f}/s;before_us={dt0/nb*1e6:.0f};"
+             f"after_us={dt1/nb*1e6:.0f};topo_us={dt2/nb*1e6:.0f};"
+             f"speedup={dt0/dt1:.1f}x;state={total/2**20:.1f}MiB;"
              + ";".join(f"shard_p{p}={b/2**20:.1f}MiB" for p, b in shard.items()))
 
 

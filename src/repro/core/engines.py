@@ -22,6 +22,7 @@ three (the paper's flexibility goal).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable
 
@@ -44,6 +45,27 @@ def _init_states(topology: Topology, key):
             for (n, p), k in zip(topology.processors.items(), keys)}
 
 
+def _stack_payloads(payloads):
+    """A list (or iterator) is a per-step payload sequence and gets stacked
+    on a new leading axis; any other pytree (dict, tuple, array) is taken
+    as already stacked -- so a tuple-rooted stacked payload is never
+    misread as a sequence of steps."""
+    if hasattr(payloads, "__next__"):
+        payloads = list(payloads)
+    if isinstance(payloads, list):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+    return payloads
+
+
+def _unstack_payloads(payloads):
+    if hasattr(payloads, "__next__"):
+        payloads = list(payloads)
+    if isinstance(payloads, list):
+        return payloads
+    n = jax.tree.leaves(payloads)[0].shape[0]
+    return [jax.tree.map(lambda x: x[i], payloads) for i in range(n)]
+
+
 class LocalEngine(Engine):
     """Sequential reference engine (paper: the local execution engine).
 
@@ -56,6 +78,15 @@ class LocalEngine(Engine):
 
     def init(self, topology: Topology, key):
         return _init_states(topology, key)
+
+    def run_stream(self, topology: Topology, states, payloads):
+        """Eager per-step loop: the reference semantics the scanned engines
+        are tested against.  Returns (states, list of per-step outputs)."""
+        outs = []
+        for payload in _unstack_payloads(payloads):
+            states, out = self.step(topology, states, payload)
+            outs.append(out)
+        return states, outs
 
     def step(self, topology: Topology, states, source_payload):
         order = topology.order()
@@ -93,15 +124,20 @@ class LocalEngine(Engine):
 class JitEngine(Engine):
     """Whole-topology step as one jitted function; feedback edges deliver
     next step (bounded staleness D=1 -- the deterministic analogue of DSPE
-    queueing delay)."""
+    queueing delay).  run_stream fuses the whole micro-batch stream into a
+    single jax.lax.scan program with donated carries."""
 
     def __init__(self, donate: bool = True):
         self.donate = donate
         self._compiled: dict[int, Callable] = {}
+        self._compiled_scan: dict[int, Callable] = {}
 
     def init(self, topology: Topology, key):
         states = _init_states(topology, key)
         return {"states": states, "feedback": None}
+
+    def _mesh_ctx(self):
+        return contextlib.nullcontext()
 
     def _make_step(self, topology: Topology):
         fb_edges = topology.feedback_edges()
@@ -142,15 +178,59 @@ class JitEngine(Engine):
         key = id(topology)
         if key not in self._compiled:
             self._compiled[key] = jax.jit(self._make_step(topology))
-        states, feedback, outputs = self._compiled[key](
-            carry["states"], carry["feedback"], source_payload)
+        with self._mesh_ctx():
+            states, feedback, outputs = self._compiled[key](
+                carry["states"], carry["feedback"], source_payload)
         return {"states": states, "feedback": feedback}, outputs
 
-    def run_stream(self, topology: Topology, carry, payload_iter):
-        outs = []
-        for payload in payload_iter:
-            carry, out = self.step(topology, carry, payload)
-            outs.append(out)
+    # ------------------------------------------------- whole-stream scan
+
+    def _scan_fn(self, topology: Topology):
+        key = id(topology)
+        fn = self._compiled_scan.get(key)
+        if fn is None:
+            step = self._make_step(topology)
+
+            def scan_fn(carry, payloads):
+                def body(c, payload):
+                    states, fb, outs = step(c["states"], c["feedback"],
+                                            payload)
+                    return {"states": states, "feedback": fb}, outs
+                return jax.lax.scan(body, carry, payloads)
+
+            donate = (0,) if self.donate and \
+                jax.default_backend() != "cpu" else ()
+            fn = jax.jit(scan_fn, donate_argnums=donate)
+            self._compiled_scan[key] = fn
+        return fn
+
+    def run_stream(self, topology: Topology, carry, payloads):
+        """Fused prequential execution: the whole stream of micro-batches is
+        ONE compiled program (jax.lax.scan over the topology step, carries
+        donated), so N batches cost one dispatch instead of N.
+
+        The first step runs through the plain jitted step to materialize the
+        feedback-carry structure (engine.init starts with feedback=None);
+        the remaining N-1 steps are scanned.  Accepts a list/iterator of
+        payload pytrees or a pytree stacked on the leading axis; returns
+        (carry, outputs stacked on the leading axis) and matches the
+        per-step loop bit for bit.
+        """
+        payloads = _stack_payloads(payloads)
+        n = jax.tree.leaves(payloads)[0].shape[0]
+        outs0 = None
+        if carry["feedback"] is None:
+            first = jax.tree.map(lambda x: x[0], payloads)
+            carry, out0 = self.step(topology, carry, first)
+            outs0 = jax.tree.map(lambda x: x[None], out0)
+            if n == 1:
+                return carry, outs0
+            payloads = jax.tree.map(lambda x: x[1:], payloads)
+        with self._mesh_ctx():
+            carry, outs = self._scan_fn(topology)(carry, payloads)
+        if outs0 is not None:
+            outs = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                outs0, outs)
         return carry, outs
 
 
@@ -161,12 +241,20 @@ class ShardMapEngine(JitEngine):
     axis sharded over 'model' (vertical parallelism); SHUFFLE-fed processor
     batches shard over 'data'; ALL-grouped streams replicate.  The jitted
     topology step is constrained accordingly -- XLA inserts the collectives
-    that Storm/Samza would perform as network shuffles.
+    that Storm/Samza would perform as network shuffles.  run_stream scans
+    the whole stream inside the mesh context, so the collectives compile
+    once for all N micro-batches.
     """
 
     def __init__(self, mesh, donate: bool = True):
         super().__init__(donate=donate)
         self.mesh = mesh
+
+    def _mesh_ctx(self):
+        use_mesh = getattr(jax.sharding, "use_mesh", None)
+        if use_mesh is not None:
+            return use_mesh(self.mesh)
+        return self.mesh      # older jax: Mesh is itself a context manager
 
     def init(self, topology: Topology, key):
         carry = super().init(topology, key)
@@ -203,13 +291,3 @@ class ShardMapEngine(JitEngine):
             else:
                 out[name] = st
         return out
-
-    def step(self, topology: Topology, carry, source_payload):
-        key = id(topology)
-        if key not in self._compiled:
-            fn = self._make_step(topology)
-            self._compiled[key] = jax.jit(fn)
-        with jax.sharding.use_mesh(self.mesh):
-            states, feedback, outputs = self._compiled[key](
-                carry["states"], carry["feedback"], source_payload)
-        return {"states": states, "feedback": feedback}, outputs

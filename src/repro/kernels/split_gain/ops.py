@@ -1,4 +1,9 @@
-"""Public jit'd wrapper for the split-gain kernel."""
+"""Public dispatcher for the split-gain reduction.
+
+impl="auto" routes through the fused Pallas kernel on TPU (cumsum +
+entropies + weighted gain in one VMEM-resident pass) and through the
+pure-jnp reference elsewhere; the two are numerically equivalent.
+"""
 
 from __future__ import annotations
 
@@ -10,8 +15,17 @@ from repro.kernels.split_gain.kernel import split_gain_pallas
 from repro.kernels.split_gain.ref import split_gain_ref
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def split_gain(stats, *, use_pallas: bool = True, interpret: bool = True):
-    if not use_pallas:
+@partial(jax.jit, static_argnames=("impl", "node_tile", "attr_tile",
+                                   "interpret"))
+def split_gain(stats, *, impl: str = "auto", node_tile: int = 0,
+               attr_tile: int = 0, interpret: bool | None = None):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
         return split_gain_ref(stats)
-    return split_gain_pallas(stats, interpret=interpret)
+    if impl != "pallas":
+        raise ValueError(f"unknown split-gain impl {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return split_gain_pallas(stats, node_tile=node_tile, attr_tile=attr_tile,
+                             interpret=interpret)

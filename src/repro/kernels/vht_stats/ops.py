@@ -1,24 +1,68 @@
-"""Public jit'd wrapper for the VHT statistics-update kernel."""
+"""Public dispatcher for the VHT statistics update.
+
+Three implementations of the same contraction
+``stats[n, j, b, c] += sum_i 1[leaf_i = n] 1[x_ij = b] 1[y_i = c] w_i``:
+
+  pallas   -- one-hot MXU matmuls, statistics tile resident in VMEM
+              (kernel.py).  Default on TPU; `interpret` fallback runs the
+              kernel body on CPU for validation.
+  segment  -- class-segmented segment-sum: one [B, m, bins] leaf-segment
+              scatter per class slice.  Never materializes the dense
+              [B, m, bins, C] one-hot product (peak intermediate memory
+              shrinks by the class count).  Default off-TPU.
+  onehot   -- the legacy dense one-hot reference (ref.py); kept as the
+              oracle for parity tests and before/after benchmarking.
+"""
 
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.vht_stats.kernel import stats_update_pallas
 from repro.kernels.vht_stats.ref import stats_update_ref
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
-def stats_update(stats, leaf, xbin, y, w, *, use_pallas: bool = True,
-                 interpret: bool = True):
+def default_impl() -> str:
+    """Pallas on backends that compile it; segment-sum elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "segment"
+
+
+def stats_update_segment(stats, leaf, xbin, y, w):
+    """Class-segmented scatter-add: the batch is partitioned into class
+    segments by folding the class one-hot into per-class weights, and each
+    class slice gets one [B, m, bins] leaf-segment sum.  The dense
+    [B, m, bins, C] one-hot product never exists -- peak intermediate
+    memory shrinks by the class count, and the scatter stays the
+    block-contiguous kind XLA vectorizes well."""
+    N, m, nb, C = stats.shape
+    binoh = jax.nn.one_hot(xbin, nb, dtype=stats.dtype)            # [B,m,bins]
+    for c in range(C):
+        wc = (w * (y == c)).astype(stats.dtype)
+        stats = stats.at[leaf, :, :, c].add(binoh * wc[:, None, None])
+    return stats
+
+
+@partial(jax.jit, static_argnames=("impl", "attr_tile", "interpret"))
+def stats_update(stats, leaf, xbin, y, w, *, impl: str = "auto",
+                 attr_tile: int = 0, interpret: bool | None = None):
     """Accumulate VHT sufficient statistics for a micro-batch.
 
-    interpret=True executes the Pallas kernel body on CPU (this container);
-    on TPU pass interpret=False.  use_pallas=False falls back to the
-    scatter-add oracle.
+    impl="auto" picks Pallas on TPU and the segment-sum formulation
+    elsewhere; `attr_tile` overrides the Pallas kernel's heuristic
+    attribute tile; `interpret=None` auto-enables interpret mode off-TPU.
     """
-    if not use_pallas:
+    if impl == "auto":
+        impl = default_impl()
+    if impl == "onehot":
         return stats_update_ref(stats, leaf, xbin, y, w)
-    return stats_update_pallas(stats, leaf, xbin, y, w, interpret=interpret)
+    if impl == "segment":
+        return stats_update_segment(stats, leaf, xbin, y, w)
+    if impl != "pallas":
+        raise ValueError(f"unknown stats impl {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return stats_update_pallas(stats, leaf, xbin, y, w,
+                               attr_tile=attr_tile, interpret=interpret)

@@ -43,7 +43,11 @@ class TreeConfig:
     tau: float = 0.05             # tie-break threshold
     split_delay: int = 0          # D engine-steps between decide & apply
     buffer_size: int = 0          # wk(z); 0 = wok when delay>0, local if D=0
-    use_pallas: bool = False
+    stats_impl: str = "auto"      # auto | pallas | segment | onehot (legacy)
+    attr_tile: int = 0            # Pallas stats kernel attribute-tile override
+    gate_splits: bool = True      # lax.cond-gate split checks on grace period
+    check_tile: int = 16          # gated check: max due leaves examined via
+                                  # gather before falling back to all nodes
 
     @property
     def range_r(self) -> float:
@@ -111,20 +115,15 @@ def predict(state, xbin, tc: TreeConfig):
 def update_stats(state, leaf, xbin, y, w, tc: TreeConfig):
     """Accumulate n_ijk for a micro-batch.  w: [B] weights (0 = dropped).
 
-    Reference implementation is a scatter-add; the TPU path
-    (repro.kernels.vht_stats) reformulates it as one-hot MXU matmuls.
+    Dispatched through repro.kernels.vht_stats: one-hot MXU matmuls on TPU
+    (Pallas, default there), a class-segmented segment-sum elsewhere --
+    neither materializes the dense [B, m, bins, C] one-hot product.
     """
-    if tc.use_pallas:
-        from repro.kernels.vht_stats.ops import stats_update
-        new_stats = stats_update(state["stats"], leaf, xbin, y, w)
-    else:
-        binoh = jax.nn.one_hot(xbin, tc.n_bins, dtype=f32)          # [B,m,bins]
-        clsoh = jax.nn.one_hot(y, tc.n_classes, dtype=f32) * w[:, None]
-        val = binoh[..., None] * clsoh[:, None, None, :]            # [B,m,bins,C]
-        new_stats = state["stats"].at[leaf].add(val)
+    from repro.kernels.vht_stats.ops import stats_update
     clsoh = jax.nn.one_hot(y, tc.n_classes, dtype=f32) * w[:, None]
     state = dict(state)
-    state["stats"] = new_stats
+    state["stats"] = stats_update(state["stats"], leaf, xbin, y, w,
+                                  impl=tc.stats_impl, attr_tile=tc.attr_tile)
     state["class_counts"] = state["class_counts"].at[leaf].add(clsoh)
     state["since_attempt"] = state["since_attempt"].at[leaf].add(w)
     state["n_total"] = state["n_total"].at[leaf].add(w)
@@ -135,45 +134,25 @@ def update_stats(state, leaf, xbin, y, w, tc: TreeConfig):
 # split criterion (LS: Alg. 3 + MA: Alg. 4)
 # --------------------------------------------------------------------------
 
-def _entropy(counts, axis=-1):
-    tot = counts.sum(axis, keepdims=True)
-    p = counts / jnp.maximum(tot, 1e-12)
-    h = -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-12)), 0.0), axis)
-    return jnp.where(tot[..., 0] > 0, h, 0.0)
-
-
 def split_gains(stats, tc: TreeConfig):
     """Information gain for every (node, attr, threshold-bin).
 
     stats: [N, m, bins, C] -> gains [N, m, bins]; the reduction over
     (bins, C) is the per-attribute work the paper parallelizes across LS
-    processors -- under GSPMD the attr axis is sharded, so this einsum
-    IS the parallel criterion computation.
+    processors -- under GSPMD the attr axis is sharded, so this reduction
+    IS the parallel criterion computation.  Routed through
+    repro.kernels.split_gain: the fused Pallas kernel on TPU, the
+    numerically identical jnp reference elsewhere.
     """
-    cum = jnp.cumsum(stats, axis=2)                     # left counts at <=t
-    total = cum[:, :, -1:, :]
-    left = cum
-    right = total - left
-    nl = left.sum(-1)
-    nr = right.sum(-1)
-    n = jnp.maximum(nl + nr, 1e-12)
-    h_tot = _entropy(total.squeeze(2) if total.shape[2] == 1 else total[:, :, 0, :])
-    hl = _entropy(left)
-    hr = _entropy(right)
-    gain = h_tot[..., None] - (nl / n * hl + nr / n * hr)
-    valid = (nl > 0) & (nr > 0)
-    return jnp.where(valid, gain, NEG)
+    from repro.kernels.split_gain.ops import split_gain
+    return split_gain(stats)
 
 
 def hoeffding_bound(n, tc: TreeConfig):
     return jnp.sqrt(tc.range_r ** 2 * math.log(1.0 / tc.delta) / (2.0 * jnp.maximum(n, 1.0)))
 
 
-def decide_splits(state, tc: TreeConfig):
-    """MA Receive(local_result): top-2 across attributes, Hoeffding test.
-
-    Returns (should_split[N], best_attr[N], best_bin[N]).
-    """
+def _decide_splits_impl(state, tc: TreeConfig):
     gains = split_gains(state["stats"], tc)             # [N, m, bins]
     N, m, bins = gains.shape
     # paper (Alg. 3/4): compare the best TWO ATTRIBUTES -- adjacent bins of
@@ -196,9 +175,89 @@ def decide_splits(state, tc: TreeConfig):
     return should, best_attr, best_bin
 
 
-def apply_splits(state, split_mask, best_attr, best_bin, tc: TreeConfig):
+_DECIDE_KEYS = ("stats", "n_total", "split_attr", "class_counts",
+                "since_attempt", "depth", "pending")
+
+
+def due_topk(due, score, k):
+    """Indices of up to k due rows, highest score first.  Non-due rows
+    score -1 so they rank last; when fewer than k rows are due the filler
+    rows MUST be masked out again by the caller's attempted/due test."""
+    return jax.lax.top_k(jnp.where(due, score, -1.0), k)[1]
+
+
+def gated_check(n_due, k, gathered, full, idle, operand):
+    """The exact split-check gate shared by decide_splits and the LS
+    processor: skip entirely when nothing is due, reduce a gathered row
+    tile when the due set fits k, fall back to the full reduction
+    otherwise."""
+    return jax.lax.cond(
+        n_due > 0,
+        lambda op: jax.lax.cond(n_due <= k, gathered, full, op),
+        idle, operand)
+
+
+def decide_splits(state, tc: TreeConfig):
+    """MA Receive(local_result): top-2 across attributes, Hoeffding test.
+
+    Returns (should_split[N], best_attr[N], best_bin[N]).  With
+    tc.gate_splits the gain reduction is lax.cond-gated on the grace
+    period, exactly:
+
+      * no leaf due            -> skip entirely; all-False is exact because
+                                  only attempted leaves can split
+      * <= check_tile leaves due -> gather just those rows (top_k on the
+                                  grace counter) and reduce [K, m, bins, C]
+                                  instead of [N, m, bins, C]; non-gathered
+                                  nodes cannot split, and best_attr/bin are
+                                  consumed only where should_split holds
+      * more due than the tile -> fall back to the full reduction
+    """
+    if not tc.gate_splits:
+        return _decide_splits_impl(state, tc)
+    N = tc.max_nodes
+    K = min(tc.check_tile, N)
+    due = (state["split_attr"] < 0) & (state["since_attempt"] >= tc.n_min)
+
+    def gathered(st):
+        idx = due_topk(due, st["since_attempt"], K)
+        sub = {k: st[k][idx] for k in _DECIDE_KEYS}
+        s_k, a_k, b_k = _decide_splits_impl(sub, tc)
+        return (jnp.zeros((N,), bool).at[idx].set(s_k),
+                jnp.zeros((N,), i32).at[idx].set(a_k),
+                jnp.zeros((N,), i32).at[idx].set(b_k))
+
+    def idle(st):
+        return (jnp.zeros((N,), bool), jnp.zeros((N,), i32),
+                jnp.zeros((N,), i32))
+
+    return gated_check(jnp.sum(due.astype(i32)), K, gathered,
+                       lambda s: _decide_splits_impl(s, tc), idle, state)
+
+
+def apply_splits(state, split_mask, best_attr, best_bin, tc: TreeConfig,
+                 child_counts=None):
     """Replace chosen leaves by split nodes, allocate 2 children each
-    (MA Alg. 4 lines 6-10; the 'drop' event = children stats start at 0)."""
+    (MA Alg. 4 lines 6-10; the 'drop' event = children stats start at 0).
+
+    `child_counts=(left[N, C], right[N, C])` supplies the child class
+    distributions directly (the MA processor receives them in the
+    local-result event and holds no statistics tensor); otherwise they are
+    derived from state["stats"].  With tc.gate_splits the whole rewiring --
+    including the child-distribution cumsum -- is skipped (lax.cond) on
+    steps where no leaf splits, the common case in steady state."""
+    if not tc.gate_splits:
+        return _apply_splits_impl(state, split_mask, best_attr, best_bin, tc,
+                                  child_counts)
+    return jax.lax.cond(
+        jnp.any(split_mask),
+        lambda op: _apply_splits_impl(op[0], op[1], op[2], op[3], tc, op[4]),
+        lambda op: (op[0], jnp.zeros((tc.max_nodes,), bool)),
+        (state, split_mask, best_attr, best_bin, child_counts))
+
+
+def _apply_splits_impl(state, split_mask, best_attr, best_bin, tc: TreeConfig,
+                       child_counts=None):
     N = tc.max_nodes
     rank = jnp.cumsum(split_mask.astype(i32)) - 1       # [N]
     base = state["n_nodes"]
@@ -216,10 +275,14 @@ def apply_splits(state, split_mask, best_attr, best_bin, tc: TreeConfig):
     state["children"] = ch
 
     # initialize children class counts from the split distribution
-    nodes = jnp.arange(N)
-    cum = jnp.cumsum(state["stats"], axis=2)
-    left_cnt = cum[nodes, jnp.maximum(best_attr, 0), jnp.maximum(best_bin, 0)]
-    right_cnt = cum[nodes, jnp.maximum(best_attr, 0), -1] - left_cnt
+    if child_counts is not None:
+        left_cnt, right_cnt = child_counts
+    else:
+        nodes = jnp.arange(N)
+        cum = jnp.cumsum(state["stats"], axis=2)
+        left_cnt = cum[nodes, jnp.maximum(best_attr, 0),
+                       jnp.maximum(best_bin, 0)]
+        right_cnt = cum[nodes, jnp.maximum(best_attr, 0), -1] - left_cnt
 
     # scratch-row scatter: rows not splitting write to a throwaway slot N
     l_idx = jnp.where(do, jnp.clip(lchild, 0, N - 1), N)
@@ -238,9 +301,13 @@ def apply_splits(state, split_mask, best_attr, best_bin, tc: TreeConfig):
     dep = set_rows(state["depth"], l_idx, child_depth)
     dep = set_rows(dep, r_idx, child_depth)
     state["depth"] = dep
-    # release the split leaf's statistics (drop content event)
-    zero = jnp.zeros_like(state["stats"][0])
-    state["stats"] = jnp.where(do[:, None, None, None], zero[None], state["stats"])
+    # release the split leaf's statistics (drop content event); the MA
+    # processor holds no statistics tensor -- its LS peers drop theirs on
+    # the broadcast 'drop' event instead
+    if "stats" in state:
+        zero = jnp.zeros_like(state["stats"][0])
+        state["stats"] = jnp.where(do[:, None, None, None], zero[None],
+                                   state["stats"])
     state["since_attempt"] = jnp.where(do, 0.0, state["since_attempt"])
     state["n_nodes"] = base + n_new
     state["n_splits"] = state["n_splits"] + jnp.sum(do.astype(i32))

@@ -66,14 +66,16 @@ class VHT:
         correct = jnp.sum((pred == y).astype(f32))
 
         pending_here = state["pending"][leaf]
+        dropped = 0.0
         if tc.split_delay == 0:
             w = jnp.ones_like(y, f32)
         elif tc.buffer_size:
-            w = jnp.ones_like(y, f32)      # wk(z): still trains downstream
+            # wk(z): buffered instances still train downstream -> none dropped
+            w = jnp.ones_like(y, f32)
             state = self._buffer_add(state, xbin, y, pending_here)
         else:
             w = jnp.where(pending_here, 0.0, 1.0)   # wok: shed load
-        dropped = jnp.sum((pending_here).astype(f32)) if tc.split_delay else 0.0
+            dropped = jnp.sum((pending_here).astype(f32))
 
         state = htree.update_stats(state, leaf, xbin, y, w, tc)
 
@@ -235,24 +237,24 @@ class ModelAggregatorProcessor(Processor):
     def process(self, state, inputs):
         tc = self.tc
         out = {}
-        # split feedback from the statistics (local-result events)
+        # split feedback from the statistics (local-result events); the
+        # child class distributions ride along in the event, so no
+        # statistics tensor (or cumsum over one) is needed here
         fb = inputs.get("local-result")
         if fb is not None:
-            full = {**state, "stats": jnp.zeros(
-                (tc.max_nodes, tc.n_attrs, tc.n_bins, tc.n_classes), f32)}
-            should = fb["should"] & (full["split_attr"] < 0)
-            full, _ = htree.apply_splits(full, should, fb["attr"], fb["bin"], tc)
-            full["class_counts"] = jnp.where(
-                should[:, None], fb["left"] + fb["right"], full["class_counts"])
-            full.pop("stats")
-            state = full
+            should = fb["should"] & (state["split_attr"] < 0)
+            state, _ = htree.apply_splits(
+                state, should, fb["attr"], fb["bin"], tc,
+                child_counts=(fb["left"], fb["right"]))
+            state = dict(state)
+            state["class_counts"] = jnp.where(
+                should[:, None], fb["left"] + fb["right"],
+                state["class_counts"])
             out["drop"] = {"leaf_mask": should}
         src = inputs.get("__source__")
         if src is not None:
             xbin, y = src["x"], src["y"]
-            stub = {**state, "stats": None}
-            pred, leaf = None, None
-            leaf = htree.route(state | {"stats": None}, xbin, tc)
+            leaf = htree.route(state, xbin, tc)
             counts = state["class_counts"][leaf]
             pred = jnp.argmax(counts, -1)
             state = dict(state)
@@ -291,27 +293,69 @@ class LocalStatisticProcessor(Processor):
         out = {}
         attr_ev = inputs.get("attribute")
         if attr_ev is not None:
-            binoh = jax.nn.one_hot(attr_ev["x"], tc.n_bins, dtype=f32)
-            clsoh = jax.nn.one_hot(attr_ev["y"], tc.n_classes, dtype=f32)
-            val = binoh[..., None] * clsoh[:, None, None, :]
-            state = {"stats": state["stats"].at[attr_ev["leaf"]].add(val)}
+            from repro.kernels.vht_stats.ops import stats_update
+            w = jnp.ones(attr_ev["y"].shape[0], f32)
+            state = {"stats": stats_update(
+                state["stats"], attr_ev["leaf"], attr_ev["x"], attr_ev["y"],
+                w, impl=tc.stats_impl, attr_tile=tc.attr_tile)}
         comp = inputs.get("compute")
         if comp is not None:
-            gains = htree.split_gains(state["stats"], tc)
-            N, m, bins = gains.shape
-            flat = gains.reshape(N, m * bins)
-            top2, idx2 = jax.lax.top_k(flat, 2)
-            ga, gb = top2[:, 0], top2[:, 1]
-            battr, bbin = idx2[:, 0] // bins, idx2[:, 0] % bins
-            eps = htree.hoeffding_bound(comp["n_total"], tc)
-            ok = (ga > 0) & ((ga - gb > eps) | (eps < tc.tau))
-            should = comp["attempt_mask"] & ok
-            nodes = jnp.arange(N)
-            cum = jnp.cumsum(state["stats"], axis=2)
-            left = cum[nodes, jnp.maximum(battr, 0), jnp.maximum(bbin, 0)]
-            right = cum[nodes, jnp.maximum(battr, 0), -1] - left
-            out["local-result"] = {"should": should, "attr": battr,
-                                   "bin": bbin, "left": left, "right": right}
+            N, C = tc.max_nodes, tc.n_classes
+
+            def answer_rows(stats_rows, n_total_rows, mask_rows):
+                """Split criterion over a row subset (Alg. 3): gains +
+                Hoeffding test + child class distributions."""
+                gains = htree.split_gains(stats_rows, tc)
+                k, m, bins = gains.shape
+                flat = gains.reshape(k, m * bins)
+                top2, idx2 = jax.lax.top_k(flat, 2)
+                ga, gb = top2[:, 0], top2[:, 1]
+                battr, bbin = idx2[:, 0] // bins, idx2[:, 0] % bins
+                eps = htree.hoeffding_bound(n_total_rows, tc)
+                ok = (ga > 0) & ((ga - gb > eps) | (eps < tc.tau))
+                should = mask_rows & ok
+                rows = jnp.arange(k)
+                cum = jnp.cumsum(stats_rows, axis=2)
+                left = cum[rows, jnp.maximum(battr, 0), jnp.maximum(bbin, 0)]
+                right = cum[rows, jnp.maximum(battr, 0), -1] - left
+                return should, battr, bbin, left, right
+
+            def full(stats):
+                s, a, b, le, ri = answer_rows(stats, comp["n_total"],
+                                              comp["attempt_mask"])
+                return {"should": s, "attr": a, "bin": b,
+                        "left": le, "right": ri}
+
+            if tc.gate_splits:
+                # the gain reduction only runs when a leaf exhausted its
+                # grace period, and only over the (few) due rows when they
+                # fit the check tile; an all-False answer is exact
+                # otherwise because only attempted leaves can split
+                K = min(tc.check_tile, N)
+
+                def gathered(stats):
+                    idx = htree.due_topk(comp["attempt_mask"],
+                                         comp["n_total"], K)
+                    s, a, b, le, ri = answer_rows(
+                        stats[idx], comp["n_total"][idx],
+                        comp["attempt_mask"][idx])
+                    return {"should": jnp.zeros((N,), bool).at[idx].set(s),
+                            "attr": jnp.zeros((N,), i32).at[idx].set(a),
+                            "bin": jnp.zeros((N,), i32).at[idx].set(b),
+                            "left": jnp.zeros((N, C), f32).at[idx].set(le),
+                            "right": jnp.zeros((N, C), f32).at[idx].set(ri)}
+
+                out["local-result"] = htree.gated_check(
+                    jnp.sum(comp["attempt_mask"].astype(i32)), K,
+                    gathered, full,
+                    lambda st: {"should": jnp.zeros((N,), bool),
+                                "attr": jnp.zeros((N,), i32),
+                                "bin": jnp.zeros((N,), i32),
+                                "left": jnp.zeros((N, C), f32),
+                                "right": jnp.zeros((N, C), f32)},
+                    state["stats"])
+            else:
+                out["local-result"] = full(state["stats"])
         drop = inputs.get("drop")
         if drop is not None:
             zero = jnp.zeros_like(state["stats"][0])

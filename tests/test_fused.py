@@ -1,0 +1,197 @@
+"""Fused whole-stream execution: scan-compiled engines, segment statistics,
+and gated split checks must be *exactly* the semantics of the per-step
+reference paths -- this PR is a perf change, not a behavior change."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engines import JitEngine, LocalEngine
+from repro.data.generators import RandomTreeGenerator, bin_numeric
+from repro.kernels.vht_stats.ops import stats_update, stats_update_segment
+from repro.kernels.vht_stats.ref import stats_update_ref
+from repro.ml.htree import TreeConfig
+from repro.ml.vht import VHT, VHTConfig, build_vht_topology
+
+TC = TreeConfig(n_attrs=20, n_bins=8, n_classes=2, max_nodes=127, n_min=100)
+
+
+@pytest.fixture(scope="module")
+def dense_stream():
+    gen = RandomTreeGenerator(n_cat=10, n_num=10, depth=5, seed=3)
+    key = jax.random.PRNGKey(0)
+    xs, ys = [], []
+    for _ in range(40):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, 256)
+        xs.append(bin_numeric(x, 8))
+        ys.append(y)
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+def _assert_trees_identical(a, b):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for (path, x), y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(path))
+
+
+# ------------------------- scanned engine == per-step loop -----------------
+
+def test_jit_engine_run_stream_bit_identical_to_step_loop(dense_stream):
+    """The tentpole acceptance: one compiled scan over the whole stream
+    produces the same states AND the same per-step outputs, bit for bit,
+    as N individual engine steps -- including through split feedback."""
+    xs, ys = dense_stream
+    cfg = VHTConfig(dataclasses.replace(TC, n_min=50))
+    topo = build_vht_topology(cfg)
+
+    eng = JitEngine()
+    carry = eng.init(topo, jax.random.PRNGKey(0))
+    outs = []
+    for i in range(xs.shape[0]):
+        carry, out = eng.step(topo, carry, {"x": xs[i], "y": ys[i]})
+        outs.append(out)
+    stacked = jax.tree.map(lambda *z: jnp.stack(z), *outs)
+
+    eng2 = JitEngine()
+    carry2 = eng2.init(topo, jax.random.PRNGKey(0))
+    carry2, souts = eng2.run_stream(topo, carry2, {"x": xs, "y": ys})
+
+    # the feedback loop must actually have fired for this to mean anything
+    assert int(carry2["states"]["model-aggregator"]["n_nodes"]) > 1
+    _assert_trees_identical(carry, carry2)
+    _assert_trees_identical(stacked, souts)
+
+
+def test_jit_engine_run_stream_accepts_payload_list(dense_stream):
+    xs, ys = dense_stream
+    cfg = VHTConfig(TC)
+    topo = build_vht_topology(cfg)
+    eng = JitEngine()
+    carry = eng.init(topo, jax.random.PRNGKey(0))
+    payload_list = [{"x": xs[i], "y": ys[i]} for i in range(4)]
+    carry, outs = eng.run_stream(topo, carry, payload_list)
+    assert outs["prediction"]["pred"].shape == (4, ys.shape[1])
+
+
+def test_local_engine_run_stream_reference_loop(dense_stream):
+    """LocalEngine keeps eager per-step semantics: a list of outputs."""
+    xs, ys = dense_stream
+    cfg = VHTConfig(TC)
+    topo = build_vht_topology(cfg)
+    eng = LocalEngine()
+    states = eng.init(topo, jax.random.PRNGKey(0))
+    states, outs = eng.run_stream(topo, states,
+                                  {"x": xs[:3], "y": ys[:3]})
+    assert isinstance(outs, list) and len(outs) == 3
+    assert outs[0]["prediction"]["pred"].shape == ys[0].shape
+
+
+def test_vht_scan_run_bit_identical_to_step_loop(dense_stream):
+    """The monolithic learner's lax.scan run equals the jitted step loop."""
+    xs, ys = dense_stream
+    vht = VHT(VHTConfig(dataclasses.replace(TC, split_delay=4)))
+    st = vht.init()
+    step = jax.jit(vht.step)
+    ms = []
+    for i in range(xs.shape[0]):
+        st, m = step(st, xs[i], ys[i])
+        ms.append(m)
+    ms = jax.tree.map(lambda *z: jnp.stack(z), *ms)
+    st2, ms2 = jax.jit(vht.run)(vht.init(), xs, ys)
+    _assert_trees_identical(st, st2)
+    _assert_trees_identical(ms, ms2)
+
+
+# ------------------------- segment stats == one-hot reference --------------
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 1e-5),
+                                        (jnp.bfloat16, 1e-1),
+                                        (jnp.float16, 1e-2)])
+def test_segment_stats_matches_onehot_ref(dtype, atol):
+    """Parity of the new segment-sum path vs the legacy dense one-hot
+    reference, across dtypes and fractional/zero weights."""
+    N, m, nb, C, B = 32, 17, 8, 3, 64
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    stats = (jax.random.uniform(k1, (N, m, nb, C)) * 5).astype(dtype)
+    leaf = jax.random.randint(k2, (B,), 0, N)
+    xbin = jax.random.randint(k3, (B, m), 0, nb)
+    y = jax.random.randint(k4, (B,), 0, C)
+    w = jnp.where(jnp.arange(B) % 4 == 0, 0.0,
+                  0.5 + jnp.arange(B) / B)           # zero + fractional
+    out = stats_update_segment(stats, leaf, xbin, y, w)
+    ref = stats_update_ref(stats.astype(jnp.float32), leaf, xbin, y, w)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=atol)
+
+
+def test_auto_impl_off_tpu_is_segment():
+    """On this container (CPU) the auto dispatch must take the segment
+    path and agree exactly with the reference."""
+    N, m, nb, C, B = 16, 9, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    stats = jnp.zeros((N, m, nb, C))
+    leaf = jax.random.randint(ks[0], (B,), 0, N)
+    xbin = jax.random.randint(ks[1], (B, m), 0, nb)
+    y = jax.random.randint(ks[2], (B,), 0, C)
+    w = jax.random.uniform(ks[3], (B,))
+    out = stats_update(stats, leaf, xbin, y, w)      # impl="auto"
+    ref = stats_update_ref(stats, leaf, xbin, y, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# ------------------------- gated split checks are exact --------------------
+
+@pytest.mark.parametrize("delay,buf", [(0, 0), (4, 0), (2, 64)])
+def test_gated_split_checks_bit_identical_to_ungated(dense_stream,
+                                                     delay, buf):
+    """lax.cond gating (including the gather tile and its overflow
+    fallback) must not change a single bit of the learned tree."""
+    xs, ys = dense_stream
+    tc = dataclasses.replace(TC, split_delay=delay, buffer_size=buf)
+    gated = VHT(VHTConfig(tc))
+    plain = VHT(VHTConfig(dataclasses.replace(tc, gate_splits=False)))
+    s1, m1 = jax.jit(gated.run)(gated.init(), xs, ys)
+    s0, m0 = jax.jit(plain.run)(plain.init(), xs, ys)
+    assert int(s1["n_splits"]) > 0                  # checks actually fired
+    _assert_trees_identical(s1, s0)
+    _assert_trees_identical(m1, m0)
+
+
+def test_gated_check_tile_overflow_fallback(dense_stream):
+    """check_tile=1 forces the full-reduction fallback whenever more than
+    one leaf is due -- still bit-identical."""
+    xs, ys = dense_stream
+    tc = dataclasses.replace(TC, check_tile=1)
+    tiny = VHT(VHTConfig(tc))
+    plain = VHT(VHTConfig(dataclasses.replace(tc, gate_splits=False)))
+    s1, _ = jax.jit(tiny.run)(tiny.init(), xs, ys)
+    s0, _ = jax.jit(plain.run)(plain.init(), xs, ys)
+    _assert_trees_identical(s1, s0)
+
+
+# ------------------------- wk(z) drop accounting ---------------------------
+
+def test_wkz_reports_zero_dropped_wok_reports_shed():
+    """wk(z) buffers pending-leaf instances but still trains on them, so
+    none are dropped; wok sheds them and must say so."""
+    B = 64
+    xbin = jnp.zeros((B, TC.n_attrs), jnp.int32)
+    y = jnp.zeros((B,), jnp.int32)
+    for delay, buf, want in [(3, 16, 0.0), (3, 0, float(B))]:
+        tc = dataclasses.replace(TC, split_delay=delay, buffer_size=buf)
+        vht = VHT(VHTConfig(tc))
+        state = vht.init()
+        # root has a pending split decision in flight
+        state["pending"] = state["pending"].at[0].set(True)
+        state["pending_timer"] = state["pending_timer"].at[0].set(5)
+        _, metrics = jax.jit(vht.step)(state, xbin, y)
+        assert float(metrics["dropped"]) == want

@@ -32,16 +32,33 @@ def test_vht_stats_matches_ref(N, m, nb, C, B):
     xbin = jax.random.randint(k3, (B, m), 0, nb)
     y = jax.random.randint(k4, (B,), 0, C)
     w = jnp.where(jnp.arange(B) % 3 == 0, 0.0, 1.0)  # mixed weights
-    out = stats_update(stats, leaf, xbin, y, w)
+    out = stats_update(stats, leaf, xbin, y, w, impl="pallas")
     ref = stats_update_ref(stats, leaf, xbin, y, w)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
 
 
-def test_vht_stats_weight_zero_is_noop():
+def test_vht_stats_attr_tile_override():
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    stats = jax.random.uniform(k1, (16, 12, 4, 2))
+    leaf = jax.random.randint(k2, (32,), 0, 16)
+    xbin = jax.random.randint(k3, (32, 12), 0, 4)
+    y = jax.random.randint(k4, (32,), 0, 2)
+    w = jnp.ones((32,))
+    ref = stats_update_ref(stats, leaf, xbin, y, w)
+    for tile in (4, 5, 12):      # including a non-divisor (padding path)
+        out = stats_update(stats, leaf, xbin, y, w, impl="pallas",
+                           attr_tile=tile)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "segment", "onehot"])
+def test_vht_stats_weight_zero_is_noop(impl):
     stats = jnp.ones((8, 4, 4, 2))
     out = stats_update(stats, jnp.zeros(16, jnp.int32),
                        jnp.zeros((16, 4), jnp.int32),
-                       jnp.zeros(16, jnp.int32), jnp.zeros(16))
+                       jnp.zeros(16, jnp.int32), jnp.zeros(16), impl=impl)
     np.testing.assert_allclose(np.asarray(out), np.asarray(stats))
 
 
@@ -55,14 +72,14 @@ def test_vht_stats_weight_zero_is_noop():
 def test_split_gain_matches_ref(N, m, nb, C):
     key = jax.random.PRNGKey(N * m)
     stats = jax.random.uniform(key, (N, m, nb, C)) * 10
-    out = split_gain(stats)
+    out = split_gain(stats, impl="pallas")
     ref = split_gain_ref(stats)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-4, rtol=1e-4)
 
 
 def test_split_gain_empty_stats_invalid():
-    g = split_gain(jnp.zeros((4, 3, 4, 2)))
+    g = split_gain(jnp.zeros((4, 3, 4, 2)), impl="pallas")
     assert float(g.max()) <= -1e29  # no valid threshold on empty stats
 
 
