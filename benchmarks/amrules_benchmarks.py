@@ -1,18 +1,22 @@
 """AMRules benchmarks (paper section 7.3): Fig. 12 throughput,
-Fig. 14-16 MAE/RMSE, Tab. 6/7 memory."""
+Fig. 14-16 MAE/RMSE, Tab. 6/7 memory -- plus the fused-vs-eager
+before/after arms written to BENCH_amrules.json."""
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import make_stream, state_bytes
+from benchmarks.common import (best_of, make_stream,
+                               run_prequential_scanned, state_bytes)
 from repro.data.generators import ElectricityLikeGenerator, WaveformGenerator
 from repro.ml.amrules import AMRules, HAMR, RulesConfig, VAMR
 
 ROWS = []
+BENCH = {}    # structured before/after numbers -> BENCH_amrules.json
 
 
 def emit(name, us_per_call, derived):
@@ -98,8 +102,60 @@ def tab67_memory(fast=True):
         emit(f"tab67.memory.{tag}", 0.0, ";".join(out))
 
 
+def fused_speedup(fast=True):
+    """Before/after of the PR-1 treatment applied to AMRules: the 'before'
+    arm is the pre-PR semantics (eager per-step jitted loop with host sync
+    per batch, dense one-hot moment products, ungated SDR expansion checks
+    every step); the 'after' arm is the fused defaults (whole-stream
+    lax.scan, rule_stats segment/Pallas scatter, lax.cond-gated
+    expansions)."""
+    arms = [("MAMR", lambda rc: AMRules(rc)),
+            ("HAMR-2", lambda rc: HAMR(rc, replicas=2))]
+    # B=128 is the streaming-realistic micro-batch (SAMOA dispatches
+    # per-instance; the per-batch overheads the fusion removes dominate
+    # there); the B=512 arm shows the compute-bound end
+    configs = [(f"{tag}-B{B}", gen, m, B)
+               for tag, gen, m in DATASETS[: 2 if fast else 3]
+               for B in ((128,) if fast else (128, 512))]
+    if fast:
+        configs.append((f"{DATASETS[0][0]}-B512", DATASETS[0][1],
+                        DATASETS[0][2], 512))
+    for tag, gen, m, B in configs:
+        n_b = 50 if fast else 120
+        if B >= 512:
+            n_b = max(10, n_b // 2)
+        xs, ys = make_stream(gen, n_b, B, 8, classification=False)
+        ys = ys.astype(jnp.float32)
+        rc_after = RulesConfig(n_attrs=m, n_bins=8, max_rules=64, n_min=200)
+        rc_before = dataclasses.replace(rc_after, stats_impl="onehot",
+                                        gate_expansions=False)
+        for name, mk in arms:
+            def eager():
+                _, mae, _, thr = _run(mk(rc_before), xs, ys)
+                return mae, thr, ys.size / thr
+            mae0, thr0, dt0 = best_of(eager)
+            mae1, thr1, dt1 = best_of(
+                lambda: run_prequential_scanned(mk(rc_after), xs, ys))
+            BENCH[f"{tag}.{name}"] = {
+                "n_batches": int(n_b), "batch": int(ys.shape[1]),
+                "before": {"us_per_batch": dt0 / n_b * 1e6,
+                           "inst_per_s": thr0, "mae": mae0,
+                           "path": "per-step loop, one-hot moments, "
+                                   "ungated expansion"},
+                "after": {"us_per_batch": dt1 / n_b * 1e6,
+                          "inst_per_s": ys.size / dt1, "mae": mae1,
+                          "path": "lax.scan stream, rule_stats kernel, "
+                                  "gated expansion"},
+                "speedup": dt0 / dt1,
+            }
+            emit(f"fused.{tag}.{name}", dt1 / n_b * 1e6,
+                 f"before_us={dt0/n_b*1e6:.0f};after_us={dt1/n_b*1e6:.0f};"
+                 f"speedup={dt0/dt1:.1f}x;mae0={mae0:.4f};mae1={mae1:.4f}")
+
+
 def main(fast=True):
     fig12_throughput(fast)
     fig1416_error(fast)
     tab67_memory(fast)
+    fused_speedup(fast)
     return ROWS

@@ -1,0 +1,119 @@
+"""CluStream benchmarks (paper section 5): online-phase throughput,
+before/after of the fused path -> BENCH_clustream.json.
+
+  before -- pre-PR semantics: eager per-batch jitted `update` with host
+            sync per batch, [B, K, d] broadcast distances, dense one-hot
+            CF matmuls (stats_impl="onehot").
+  after  -- fused defaults: whole-stream lax.scan over CluStream.step,
+            matmul-identity distances, segment-sum CF scatter, period-gated
+            macro phase.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import best_of
+from repro.ml.clustream import CluStream, CluStreamConfig, update
+
+ROWS = []
+BENCH = {}    # structured before/after numbers -> BENCH_clustream.json
+
+
+def emit(name, us_per_call, derived):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _blob_stream(key, n_b, batch, d, n_blobs=8):
+    centers = jax.random.uniform(key, (n_blobs, d))
+    xs = []
+    for _ in range(n_b):
+        key, k1, k2 = jax.random.split(key, 3)
+        c = jax.random.randint(k1, (batch,), 0, n_blobs)
+        xs.append(centers[c] + 0.05 * jax.random.normal(k2, (batch, d)))
+    return jnp.stack(xs)
+
+
+def _run_eager(cc, xs):
+    """Pre-PR loop: one jitted online `update` per micro-batch."""
+    st = CluStream(cc).init()
+    st.pop("macro")
+    upd = jax.jit(lambda s, x: update(s, x, cc))
+    st = upd(st, xs[0])
+    jax.block_until_ready(st["n"])
+    st = CluStream(cc).init()
+    st.pop("macro")
+    t0 = time.perf_counter()
+    for i in range(xs.shape[0]):
+        st = upd(st, xs[i])
+    jax.block_until_ready(st["n"])
+    return st, time.perf_counter() - t0
+
+
+def _run_scanned(cc, xs):
+    """Fused loop: the whole stream through one compiled lax.scan."""
+    cs = CluStream(cc)
+    state = cs.init()
+    compiled = jax.jit(cs.run).lower(state, xs).compile()
+    st, ms = compiled(state, xs)
+    jax.block_until_ready(st["n"])
+    t0 = time.perf_counter()
+    st, ms = compiled(state, xs)
+    jax.block_until_ready(st["n"])
+    return st, ms, time.perf_counter() - t0
+
+
+def online_speedup(fast=True):
+    n_b = 25 if fast else 80
+    arms = [("d32-K100", 32, 100), ("d128-K256", 128, 256)]
+    if fast:
+        arms = arms[:1] + [("d64-K128", 64, 128)]
+    for tag, d, K in arms:
+        xs = _blob_stream(jax.random.PRNGKey(0), n_b, 512, d)
+        cc_after = CluStreamConfig(n_dims=d, n_micro=K, n_macro=8,
+                                   period=4096)
+        cc_before = dataclasses.replace(cc_after, stats_impl="onehot")
+
+        def eager():
+            st, dt = _run_eager(cc_before, xs)
+            return st, None, dt
+
+        def scanned():
+            st, ms, dt = _run_scanned(cc_after, xs)
+            return (st, ms), None, dt
+
+        st0, _, dt0 = best_of(eager)
+        (st1, ms1), _, dt1 = best_of(scanned)
+        # both arms must have built comparable micro-cluster mass
+        n0 = float(np.asarray(st0["n"]).sum())
+        n1 = float(np.asarray(st1["n"]).sum())
+        BENCH[tag] = {
+            "n_batches": int(n_b), "batch": int(xs.shape[1]),
+            "before": {"us_per_batch": dt0 / n_b * 1e6,
+                       "inst_per_s": xs.shape[0] * xs.shape[1] / dt0,
+                       "cf_mass": n0,
+                       "path": "per-batch loop, broadcast distance, "
+                               "one-hot CF matmuls"},
+            "after": {"us_per_batch": dt1 / n_b * 1e6,
+                      "inst_per_s": xs.shape[0] * xs.shape[1] / dt1,
+                      "cf_mass": n1,
+                      "ssq": float(np.asarray(ms1["ssq"])[-1]),
+                      "path": "lax.scan stream, matmul distance, "
+                              "segment-sum CF, gated macro"},
+            "speedup": dt0 / dt1,
+        }
+        emit(f"online.{tag}", dt1 / n_b * 1e6,
+             f"before_us={dt0/n_b*1e6:.0f};after_us={dt1/n_b*1e6:.0f};"
+             f"speedup={dt0/dt1:.1f}x;mass0={n0:.0f};mass1={n1:.0f}")
+
+
+def main(fast=True):
+    online_speedup(fast)
+    return ROWS

@@ -33,6 +33,18 @@ def _metric(corr, abse, seen):
     return corr / seen if corr else abse / seen
 
 
+def best_of(fn, reps=2):
+    """Re-measure a (metric, thr, dt) benchmark closure and keep the
+    fastest wall-clock (the steady-state number on a noisy container);
+    the metric is identical across reps (deterministic streams)."""
+    metric, thr, dt = fn()
+    for _ in range(reps - 1):
+        m2, t2, d2 = fn()
+        if d2 < dt:
+            metric, thr, dt = m2, t2, d2
+    return metric, thr, dt
+
+
 def run_prequential(learner, xs, ys, *, name=""):
     """Returns (final_acc_or_err, throughput inst/s, wall seconds)."""
     state = _init_state(learner)

@@ -1,0 +1,75 @@
+"""OzaBag/OzaBoost ensemble benchmarks (paper section 5): before/after of
+the fused path -> BENCH_ensemble.json.
+
+  before -- pre-PR semantics: eager per-step jitted loop with host sync
+            per batch, dense one-hot tree statistics, split checks run for
+            every member every step (no cross-member gate).
+  after  -- fused defaults: whole-stream lax.scan over OzaEnsemble.step,
+            kernelized member statistics, member split work lax.cond-gated
+            on ANY member having a due leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (best_of, make_stream, run_prequential,
+                               run_prequential_scanned)
+from repro.data.generators import RandomTreeGenerator
+from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
+from repro.ml.htree import TreeConfig
+
+ROWS = []
+BENCH = {}    # structured before/after numbers -> BENCH_ensemble.json
+
+
+def emit(name, us_per_call, derived):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def fused_speedup(fast=True):
+    n_b = 25 if fast else 60
+    arms = [("bag-m20-M5", 20, 5, False), ("boost-m60-M8", 60, 8, True)]
+    if fast:
+        arms = arms[:1]
+    for tag, m, M, boost in arms:
+        half = m // 2
+        gen = RandomTreeGenerator(n_cat=half, n_num=m - half, depth=6)
+        xs, ys = make_stream(gen, n_b, 128, 8)
+        tc_after = TreeConfig(n_attrs=m, n_bins=8, n_classes=2,
+                              max_nodes=255, n_min=200)
+        tc_before = dataclasses.replace(tc_after, stats_impl="onehot",
+                                        gate_splits=False)
+        ec_after = EnsembleConfig(tree=tc_after, n_members=M, boost=boost)
+        ec_before = EnsembleConfig(tree=tc_before, n_members=M, boost=boost,
+                                   gate_members=False)
+        acc0, thr0, dt0 = best_of(
+            lambda: run_prequential(OzaEnsemble(ec_before), xs, ys))
+        acc1, thr1, dt1 = best_of(
+            lambda: run_prequential_scanned(OzaEnsemble(ec_after), xs, ys))
+        BENCH[tag] = {
+            "n_batches": int(n_b), "batch": int(ys.shape[1]),
+            "n_members": int(M),
+            "before": {"us_per_batch": dt0 / n_b * 1e6, "inst_per_s": thr0,
+                       "acc": acc0,
+                       "path": "per-step loop, one-hot stats, per-member "
+                               "ungated splits"},
+            "after": {"us_per_batch": dt1 / n_b * 1e6, "inst_per_s": thr1,
+                      "acc": acc1,
+                      "path": "lax.scan stream, kernel stats, gated member "
+                              "splits"},
+            "speedup": dt0 / dt1,
+        }
+        emit(f"fused.{tag}", dt1 / n_b * 1e6,
+             f"before_us={dt0/n_b*1e6:.0f};after_us={dt1/n_b*1e6:.0f};"
+             f"speedup={dt0/dt1:.1f}x;acc0={acc0:.3f};acc1={acc1:.3f}")
+
+
+def main(fast=True):
+    fused_speedup(fast)
+    return ROWS

@@ -2,11 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV.  --full runs paper-scale streams;
 the default fast mode (also spellable --fast, for CI symmetry) keeps the
-whole suite CPU-friendly.  The VHT suite additionally writes its structured
-before/after fig89 numbers to BENCH_vht.json (--bench-json to relocate) so
-the perf trajectory is tracked PR over PR.
+whole suite CPU-friendly.  Suites that track a before/after perf
+trajectory additionally write structured numbers to BENCH_<suite>.json
+(vht -> BENCH_vht.json, amrules -> BENCH_amrules.json, clustream ->
+BENCH_clustream.json, ensemble -> BENCH_ensemble.json; --bench-json
+relocates the VHT file for backward compatibility) so the trajectory is
+tracked PR over PR.
 
-  PYTHONPATH=src python -m benchmarks.run [--full|--fast] [--only vht|amrules|lm|kernels]
+  PYTHONPATH=src python -m benchmarks.run [--full|--fast] \
+      [--only vht|amrules|clustream|ensemble|lm|kernels]
 """
 
 from __future__ import annotations
@@ -27,31 +31,46 @@ def main() -> None:
     args = ap.parse_args()
     fast = args.fast or not args.full
 
-    from benchmarks import amrules_benchmarks, kernel_benchmarks, lm_roofline
-    from benchmarks import vht_benchmarks
+    from benchmarks import (amrules_benchmarks, clustream_benchmarks,
+                            ensemble_benchmarks, kernel_benchmarks,
+                            lm_roofline, vht_benchmarks)
 
     suites = {
-        "vht": vht_benchmarks.main,
-        "amrules": amrules_benchmarks.main,
-        "lm": lm_roofline.main,
-        "kernels": kernel_benchmarks.main,
+        "vht": vht_benchmarks,
+        "amrules": amrules_benchmarks,
+        "clustream": clustream_benchmarks,
+        "ensemble": ensemble_benchmarks,
+        "lm": lm_roofline,
+        "kernels": kernel_benchmarks,
     }
     if args.only:
         suites = {args.only: suites[args.only]}
     print("name,us_per_call,derived")
-    failures = 0
-    for name, fn in suites.items():
+    failed = set()
+    for name, mod in suites.items():
         try:
-            fn(fast=fast)
+            mod.main(fast=fast)
         except Exception as e:  # keep the harness going, flag the suite
-            failures += 1
+            failed.add(name)
             print(f"{name}.SUITE_FAILED,0,{type(e).__name__}:{e}", flush=True)
-    if vht_benchmarks.BENCH:
-        with open(args.bench_json, "w") as f:
-            json.dump({"fig89": vht_benchmarks.BENCH, "mode":
-                       "fast" if fast else "full"}, f, indent=2)
-        print(f"wrote {args.bench_json}", flush=True)
-    if failures:
+    mode = "fast" if fast else "full"
+    for name, mod in suites.items():
+        bench = getattr(mod, "BENCH", None)
+        # a failed suite's BENCH may be half-filled -- don't publish a
+        # partial trajectory that looks complete
+        if not bench or name in failed:
+            continue
+        # the VHT file keeps its historical fig89 schema and --bench-json
+        # override; the other suites write {"arms": ...}
+        if name == "vht":
+            path, payload = args.bench_json, {"fig89": bench, "mode": mode}
+        else:
+            path = f"BENCH_{name}.json"
+            payload = {"arms": bench, "mode": mode}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {path}", flush=True)
+    if failed:
         sys.exit(1)
 
 

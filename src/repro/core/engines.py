@@ -31,12 +31,43 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core.topology import Grouping, Topology
+from repro.core.topology import (Grouping, Topology, build_learner_topology)
 
 
 class Engine:
     def run_stream(self, topology, states, batches):  # pragma: no cover
         raise NotImplementedError
+
+    _LEARNER_CACHE_MAX = 16
+
+    def _evict_topology(self, topology: Topology):
+        """Hook: subclasses drop any compiled programs keyed on the
+        evicted wrapper so evictions free the executables too."""
+
+    def _as_topology(self, topology) -> Topology:
+        """Engines accept either a Topology or a bare functional learner
+        (init/step): learners are wrapped in a single-processor topology
+        (LRU-cached per learner, so the jit caches keyed on id() stay warm
+        without pinning every learner an engine ever saw) -- run_stream
+        then scan-compiles ensemble/AMRules/CluStream streams exactly like
+        the hand-wired VHT graph."""
+        if isinstance(topology, Topology):
+            return topology
+        cache = getattr(self, "_learner_topologies", None)
+        if cache is None:
+            cache = self._learner_topologies = {}
+        entry = cache.get(id(topology))
+        # the entry pins the learner, so its id cannot be recycled while
+        # cached; the identity check guards the eviction race anyway
+        if entry is not None and entry[0] is topology:
+            cache[id(topology)] = cache.pop(id(topology))   # refresh recency
+            return entry[1]
+        if len(cache) >= self._LEARNER_CACHE_MAX:
+            _, old_topo = cache.pop(next(iter(cache)))   # oldest entry
+            self._evict_topology(old_topo)
+        topo = build_learner_topology(topology)
+        cache[id(topology)] = (topology, topo)
+        return topo
 
 
 def _init_states(topology: Topology, key):
@@ -77,11 +108,12 @@ class LocalEngine(Engine):
         self.max_feedback_iters = max_feedback_iters
 
     def init(self, topology: Topology, key):
-        return _init_states(topology, key)
+        return _init_states(self._as_topology(topology), key)
 
     def run_stream(self, topology: Topology, states, payloads):
         """Eager per-step loop: the reference semantics the scanned engines
         are tested against.  Returns (states, list of per-step outputs)."""
+        topology = self._as_topology(topology)
         outs = []
         for payload in _unstack_payloads(payloads):
             states, out = self.step(topology, states, payload)
@@ -89,6 +121,7 @@ class LocalEngine(Engine):
         return states, outs
 
     def step(self, topology: Topology, states, source_payload):
+        topology = self._as_topology(topology)
         order = topology.order()
         inboxes: dict[str, dict] = {n: {} for n in topology.processors}
         inboxes[topology.entry]["__source__"] = source_payload
@@ -132,8 +165,12 @@ class JitEngine(Engine):
         self._compiled: dict[int, Callable] = {}
         self._compiled_scan: dict[int, Callable] = {}
 
+    def _evict_topology(self, topology: Topology):
+        self._compiled.pop(id(topology), None)
+        self._compiled_scan.pop(id(topology), None)
+
     def init(self, topology: Topology, key):
-        states = _init_states(topology, key)
+        states = _init_states(self._as_topology(topology), key)
         return {"states": states, "feedback": None}
 
     def _mesh_ctx(self):
@@ -175,6 +212,7 @@ class JitEngine(Engine):
         return step
 
     def step(self, topology: Topology, carry, source_payload):
+        topology = self._as_topology(topology)
         key = id(topology)
         if key not in self._compiled:
             self._compiled[key] = jax.jit(self._make_step(topology))
@@ -214,8 +252,10 @@ class JitEngine(Engine):
         the remaining N-1 steps are scanned.  Accepts a list/iterator of
         payload pytrees or a pytree stacked on the leading axis; returns
         (carry, outputs stacked on the leading axis) and matches the
-        per-step loop bit for bit.
+        per-step loop bit for bit.  Accepts a Topology or a bare learner
+        (see Engine._as_topology).
         """
+        topology = self._as_topology(topology)
         payloads = _stack_payloads(payloads)
         n = jax.tree.leaves(payloads)[0].shape[0]
         outs0 = None
@@ -257,6 +297,7 @@ class ShardMapEngine(JitEngine):
         return self.mesh      # older jax: Mesh is itself a context manager
 
     def init(self, topology: Topology, key):
+        topology = self._as_topology(topology)
         carry = super().init(topology, key)
         carry["states"] = self._shard_states(topology, carry["states"])
         return carry

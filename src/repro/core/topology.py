@@ -175,3 +175,42 @@ class Task:
 
     def topology(self) -> Topology:  # pragma: no cover - interface
         raise NotImplementedError
+
+
+class LearnerProcessor(Processor):
+    """Adapts any functional learner (``init(key?) -> state``,
+    ``step(state, x[, y]) -> (state, metrics)``) to the platform, so the
+    scanned engines compile its whole stream exactly like a hand-wired
+    topology.  Payloads are ``{"x": ..., "y": ...}`` dicts (``y`` optional,
+    e.g. clustering); metrics emit on the task-level "metrics" stream.
+    """
+
+    def __init__(self, learner, name: str | None = None):
+        self.learner = learner
+        self.name = name or type(learner).__name__.lower()
+
+    def init_state(self, key):
+        return self.learner.init(key)
+
+    def state_sharding(self):
+        fn = getattr(self.learner, "state_sharding", None)
+        return fn() if fn is not None else None
+
+    def process(self, state, inputs):
+        src = inputs.get("__source__")
+        if src is None:
+            return state, {}
+        args = [src[k] for k in ("x", "y") if k in src]
+        state, metrics = self.learner.step(state, *args)
+        return state, {"metrics": metrics}
+
+
+def build_learner_topology(learner, name: str | None = None) -> Topology:
+    """Single-processor topology around a functional learner -- the bridge
+    that lets JitEngine/ShardMapEngine.run_stream scan-compile ensembles,
+    AMRules, and CluStream streams, not just the hand-built VHT graph."""
+    proc = LearnerProcessor(learner, name=name)
+    b = TopologyBuilder(proc.name)
+    b.add_processor(proc, entry=True)
+    b.create_stream("metrics", proc.name)
+    return b.build()

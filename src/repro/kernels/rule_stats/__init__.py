@@ -1,0 +1,7 @@
+from repro.kernels.rule_stats.ops import (default_impl, rule_moments,
+                                          rule_stats_update,
+                                          rule_stats_update_segment)
+from repro.kernels.rule_stats.ref import rule_stats_ref
+
+__all__ = ["default_impl", "rule_moments", "rule_stats_update",
+           "rule_stats_update_segment", "rule_stats_ref"]

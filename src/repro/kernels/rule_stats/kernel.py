@@ -1,0 +1,85 @@
+"""Pallas kernel: rule-statistics accumulation as one-hot MXU matmuls.
+
+The weighted-moments generalization of the VHT counter kernel
+(repro.kernels.vht_stats.kernel): where the VHT kernel builds its value
+matrix from a CLASS one-hot of integer labels, this one takes a dense
+per-instance moment matrix mom[i, c] (for AMRules: (w, w*y, w*y^2)) so one
+kernel covers regression moments, and any other per-instance weighting,
+without an integer-label detour:
+
+    delta[r, j, b, c] = sum_i seg1h[i, r] * bin1h[i, j, b] * mom[i, c]
+                      = (seg1h^T  @  V)     with V = bin1h (x) mom
+
+one [R, B] x [B, ja*bins*C] matmul per attribute tile -- MXU work with the
+statistics tile resident in VMEM and accumulated in place
+(input_output_aliasing).  Instances with seg == R (uncovered / discarded)
+produce an all-zero one-hot row and contribute nothing, so the scratch-row
+convention of the reference costs nothing here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+f32 = jnp.float32
+
+
+def _kernel(seg_ref, mom_ref, xbin_ref, stats_in_ref, stats_ref, *,
+            n_rows, n_bins, n_mom):
+    B = seg_ref.shape[0]
+    ja = xbin_ref.shape[1]
+
+    seg = seg_ref[...]                                     # [B]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (B, n_rows), 1)
+    seg1h = (seg[:, None] == rows).astype(f32)             # [B, R]
+
+    mom = mom_ref[...]                                     # [B, C]
+
+    xb = xbin_ref[...]                                     # [B, ja]
+    bins = jax.lax.broadcasted_iota(jnp.int32, (B, ja, n_bins), 2)
+    bin1h = (xb[:, :, None] == bins).astype(f32)           # [B, ja, bins]
+
+    # V[i, j, b, c] = bin1h * mom  -> flatten to [B, ja*bins*C]
+    v = bin1h[:, :, :, None] * mom[:, None, None, :]
+    v2 = v.reshape(B, ja * n_bins * n_mom)
+
+    delta = jax.lax.dot_general(
+        seg1h, v2, (((0,), (0,)), ((), ())),
+        preferred_element_type=f32)                        # [R, ja*bins*C]
+    stats_ref[...] = (stats_in_ref[...]
+                      + delta.reshape(n_rows, ja, n_bins, n_mom))
+
+
+def rule_stats_pallas(stats, seg, xbin, mom, *, attr_tile: int = 0,
+                      interpret: bool = False):
+    """stats: [R, m, bins, C]; returns updated stats (aliased in-place)."""
+    R, m, nb, C = stats.shape
+    B = seg.shape[0]
+    ja = attr_tile or min(m, max(128 // max(nb * C // 8, 1), 8))
+    ja = min(ja, m)
+    # pad attribute axis to a tile multiple
+    mp = -(-m // ja) * ja
+    if mp != m:
+        xbin = jnp.pad(xbin, ((0, 0), (0, mp - m)))
+        stats = jnp.pad(stats, ((0, 0), (0, mp - m), (0, 0), (0, 0)))
+
+    kern = functools.partial(_kernel, n_rows=R, n_bins=nb, n_mom=C)
+    out = pl.pallas_call(
+        kern,
+        grid=(mp // ja,),
+        in_specs=[
+            pl.BlockSpec((B,), lambda j: (0,)),            # seg
+            pl.BlockSpec((B, C), lambda j: (0, 0)),        # moments
+            pl.BlockSpec((B, ja), lambda j: (0, j)),       # xbin tile
+            pl.BlockSpec((R, ja, nb, C), lambda j: (0, j, 0, 0)),  # stats in
+        ],
+        out_specs=pl.BlockSpec((R, ja, nb, C), lambda j: (0, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(stats.shape, stats.dtype),
+        input_output_aliases={3: 0},                       # stats aliased
+        interpret=interpret,
+    )(seg, mom.astype(f32), xbin, stats)
+    return out[:, :m] if mp != m else out

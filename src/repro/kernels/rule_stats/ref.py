@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the rule-statistics (weighted moments) update.
+
+This is the legacy dense formulation the AMRules learners used before the
+kernelized path: materialize the [B, m, bins, C] product of the bin one-hot
+with the per-instance moment matrix, then scatter-add by segment id through
+a scratch row (segment == R drops the instance).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rule_stats_ref(stats, seg, xbin, mom):
+    """stats: [R, m, bins, C] f32; seg: [B] i32 in [0, R] (R = discard);
+    xbin: [B, m] i32; mom: [B, C] f32 per-instance moment weights.
+    Returns updated stats."""
+    R = stats.shape[0]
+    n_bins = stats.shape[2]
+    binoh = jax.nn.one_hot(xbin, n_bins, dtype=stats.dtype)        # [B,m,bins]
+    val = binoh[..., None] * mom[:, None, None, :].astype(stats.dtype)
+    pad = jnp.zeros((1, *stats.shape[1:]), stats.dtype)
+    return jnp.concatenate([stats, pad], 0).at[seg].add(val)[:R]

@@ -1,7 +1,13 @@
 from repro.ml.htree import TreeConfig, init_tree, route, update_stats, split_gains
 from repro.ml.vht import VHT, VHTConfig, ShardingEnsemble
+from repro.ml.amrules import AMRules, HAMR, RulesConfig, VAMR
+from repro.ml.clustream import CluStream, CluStreamConfig
+from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
 
 __all__ = [
     "TreeConfig", "init_tree", "route", "update_stats", "split_gains",
     "VHT", "VHTConfig", "ShardingEnsemble",
+    "AMRules", "HAMR", "RulesConfig", "VAMR",
+    "CluStream", "CluStreamConfig",
+    "EnsembleConfig", "OzaEnsemble",
 ]

@@ -3,9 +3,10 @@
 Rule model (tensorized, capacity-bounded):
   * predicates: (attr, op, threshold-bin) triples, up to F per rule;
   * heads: adaptive target mean over covered instances;
-  * per-rule expansion statistics: target count/sum/sumsq per (attr, bin)
-    -- the VAMR learner state, key-grouped by RULE ID ('rules' axis ->
-    'model' mesh axis);
+  * per-rule expansion statistics: target (count, sum, sumsq) moments per
+    (attr, bin), one tensor stats[rule, attr, bin, moment] -- the VAMR
+    learner state, key-grouped by RULE ID ('rules' axis -> 'model' mesh
+    axis);
   * default rule: covers the rest; expanding it creates a new rule
     (centralized default-rule learner in HAMR).
 
@@ -14,6 +15,17 @@ the ratio of the two best SDRs (ratio + eps < 1, or eps < tau tie-break).
 Change detection: Page-Hinkley on each rule's absolute error evicts drifted
 rules.  Ordered-rules mode (the paper's focus): first covering rule
 predicts and trains.
+
+Performance (the fused/kernelized path, mirroring the VHT treatment):
+  * statistics updates scatter (w, w*y, w*y^2) moments through
+    repro.kernels.rule_stats -- Pallas MXU matmuls on TPU, an element
+    scatter elsewhere; the dense [B, m, bins] bin one-hot product of the
+    legacy path never materializes (RulesConfig.stats_impl="onehot" keeps
+    the oracle);
+  * the SDR cumsum + top-k expansion checks over [R, m, bins] are
+    lax.cond-gated on the n_min grace period (RulesConfig.gate_expansions)
+    and skip entirely on the (common) steps where no rule is due -- exact,
+    because a non-due rule can never expand.
 
 Parallelism:
   MAMR -- sequential reference (the MOA baseline).
@@ -28,13 +40,20 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.rule_stats.ops import (default_impl, rule_moments,
+                                          rule_stats_update)
+
 f32 = jnp.float32
 i32 = jnp.int32
 BIG = 1e30
+
+# moment-axis layout of the statistics tensor [R, m, bins, 3]
+CNT, SUM, SQ = 0, 1, 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +69,9 @@ class RulesConfig:
     ph_alpha: float = 0.005
     delay: int = 0            # expansion feedback staleness (VAMR/HAMR)
     ordered: bool = True
+    stats_impl: str = "auto"  # auto | pallas | segment | onehot (legacy)
+    attr_tile: int = 0        # Pallas stats kernel attribute-tile override
+    gate_expansions: bool = True  # lax.cond-gate SDR checks on grace period
 
     @property
     def eps_n(self):
@@ -58,14 +80,8 @@ class RulesConfig:
 
 def init_rules(rc: RulesConfig):
     R, F, m, nb = rc.max_rules, rc.max_feats, rc.n_attrs, rc.n_bins
-    def stats():
-        return {
-            "cnt": jnp.zeros((R, m, nb), f32),
-            "sum": jnp.zeros((R, m, nb), f32),
-            "sq": jnp.zeros((R, m, nb), f32),
-        }
     return {
-        "active": jnp.zeros((R,), bool).at[0].set(False),
+        "active": jnp.zeros((R,), bool),
         "pred_attr": jnp.zeros((R, F), i32),
         "pred_op": jnp.zeros((R, F), i32),       # 0: <= thr, 1: > thr
         "pred_bin": jnp.zeros((R, F), i32),
@@ -73,9 +89,10 @@ def init_rules(rc: RulesConfig):
         "head_n": jnp.zeros((R,), f32),
         "head_sum": jnp.zeros((R,), f32),
         "since": jnp.zeros((R,), f32),
-        "stats": stats(),
+        # (cnt, sum, sumsq) target moments per (rule, attr, bin)
+        "stats": jnp.zeros((R, m, nb, 3), f32),
         # default rule
-        "d_stats": jax.tree.map(lambda x: x[0], stats()),
+        "d_stats": jnp.zeros((m, nb, 3), f32),
         "d_n": jnp.zeros((), f32),
         "d_sum": jnp.zeros((), f32),
         "d_since": jnp.zeros((), f32),
@@ -97,13 +114,30 @@ def init_rules(rc: RulesConfig):
 
 
 def coverage(state, xbin, rc: RulesConfig):
-    """[B, R] bool: does rule r cover instance b?"""
+    """[B, R] bool: does rule r cover instance b?
+
+    Formulated as a violated-predicate count so the batch side is one
+    [B, m*bins] x [m*bins, R] matmul against the bin one-hot instead of a
+    [B, R, F] gather (the gather serializes badly on CPU and wastes the
+    MXU on TPU).  viol[r, a, v] counts rule r's predicates on attribute a
+    that bin value v violates; the counts are small integers in f32, so
+    `covered == (count == 0)` is exact and the result is bit-identical to
+    the gather formulation.
+    """
     pa, po, pb, pv = (state["pred_attr"], state["pred_op"],
                       state["pred_bin"], state["pred_valid"])
-    v = xbin[:, pa]                              # [B, R, F]
-    sat = jnp.where(po[None] == 0, v <= pb[None], v > pb[None])
-    sat = jnp.where(pv[None], sat, True)
-    return jnp.all(sat, axis=-1) & state["active"][None]
+    B = xbin.shape[0]
+    R = rc.max_rules
+    m, nb = rc.n_attrs, rc.n_bins
+    bins = jnp.arange(nb)
+    # maskf[r, f, v]: predicate f of rule r is violated by bin value v
+    maskf = jnp.where(po[..., None] == 0, bins[None, None] > pb[..., None],
+                      bins[None, None] <= pb[..., None]) & pv[..., None]
+    attr1h = jax.nn.one_hot(pa, m, dtype=f32)                  # [R, F, m]
+    viol = jnp.einsum("rfa,rfv->rav", attr1h, maskf.astype(f32))
+    binoh = jax.nn.one_hot(xbin, nb, dtype=f32)                # [B, m, nb]
+    unsat = binoh.reshape(B, m * nb) @ viol.reshape(R, m * nb).T
+    return (unsat < 0.5) & state["active"][None]
 
 
 def first_cover(cov, rc: RulesConfig):
@@ -172,6 +206,15 @@ class AMRules:
     def init(self, key=None):
         return init_rules(self.rc)
 
+    def state_sharding(self):
+        """ShardMapEngine hint: the rule axis of the statistics tensor is
+        the paper's vertical-parallelism axis (key grouping by rule id).
+        eval_shape enumerates the state keys without allocating it."""
+        from jax.sharding import PartitionSpec as P
+        hint = {k: None for k in jax.eval_shape(lambda: init_rules(self.rc))}
+        hint["stats"] = P("model", None, None, None)
+        return hint
+
     # ------------------------------------------------------------- step
 
     def step(self, state, xbin, y):
@@ -189,39 +232,27 @@ class AMRules:
 
         state = dict(state)
         # ---- update covered rules' head + stats (scatter by rule id) ----
-        oh = jax.nn.one_hot(jnp.where(covered, first, R), R + 1, dtype=f32)[:, :R]
-        state["head_n"] = state["head_n"] + oh.sum(0)
-        state["head_sum"] = state["head_sum"] + (oh * y[:, None]).sum(0)
-        state["since"] = state["since"] + oh.sum(0)
-        binoh = jax.nn.one_hot(xbin, rc.n_bins, dtype=f32)   # [B,m,nb]
-        ridx = jnp.where(covered, first, R)                  # scratch row R
-        st = state["stats"]
-        def pad_add(arr, val):
-            pad = jnp.zeros((1, *arr.shape[1:]), arr.dtype)
-            return jnp.concatenate([arr, pad], 0).at[ridx].add(val)[:R]
-        st = {
-            "cnt": pad_add(st["cnt"], binoh),
-            "sum": pad_add(st["sum"], binoh * y[:, None, None]),
-            "sq": pad_add(st["sq"], binoh * jnp.square(y)[:, None, None]),
-        }
-        state["stats"] = st
+        # heads, grace counters, and the PH error reduce through one set of
+        # rule-id segment sums (no [B, R] one-hot matvecs)
+        ridx = jnp.where(covered, first, R)
+        seg_sum = partial(jax.ops.segment_sum, segment_ids=ridx,
+                          num_segments=R + 1)
+        cnt = seg_sum(jnp.ones_like(y))[:R]
+        state["head_n"] = state["head_n"] + cnt
+        state["head_sum"] = state["head_sum"] + seg_sum(y)[:R]
+        state["since"] = state["since"] + cnt
+        mom = rule_moments(y)                                # [B, 3]
+        state = self._scatter_stats(state, covered, first, xbin, mom)
 
-        # ---- default rule update with uncovered instances ----------------
+        # ---- default rule head with uncovered instances ------------------
         w = (~covered).astype(f32)
         state["d_n"] = state["d_n"] + w.sum()
         state["d_sum"] = state["d_sum"] + (w * y).sum()
         state["d_since"] = state["d_since"] + w.sum()
-        ds = state["d_stats"]
-        ds = {
-            "cnt": ds["cnt"] + (binoh * w[:, None, None]).sum(0),
-            "sum": ds["sum"] + (binoh * (w * y)[:, None, None]).sum(0),
-            "sq": ds["sq"] + (binoh * (w * jnp.square(y))[:, None, None]).sum(0),
-        }
-        state["d_stats"] = ds
 
         # ---- Page-Hinkley drift eviction ---------------------------------
-        rule_err = (oh * abs_err[:, None]).sum(0) / jnp.maximum(oh.sum(0), 1.0)
-        has = oh.sum(0) > 0
+        rule_err = seg_sum(abs_err)[:R] / jnp.maximum(cnt, 1.0)
+        has = cnt > 0
         mt = jnp.where(has, state["ph_m"] + rule_err - state["ph_err"]
                        - rc.ph_alpha, state["ph_m"])
         err_avg = jnp.where(
@@ -231,10 +262,11 @@ class AMRules:
         state["ph_m"], state["ph_min"], state["ph_err"] = mt, ph_min, err_avg
         state = self._evict(state, drift)
 
-        # ---- expansions ---------------------------------------------------
+        # ---- expansions (lax.cond-gated on the grace period) -------------
         state = self._apply_pending(state)
         state = self._try_expand(state)
         state = self._try_default_expand(state)
+        state["n_rules"] = jnp.sum(state["active"].astype(i32))
 
         metrics = {
             "abs_err": abs_err.sum(),
@@ -246,6 +278,33 @@ class AMRules:
 
     # ------------------------------------------------------------ pieces
 
+    def _scatter_stats(self, state, covered, first, xbin, mom):
+        """Scatter (w, w*y, w*y^2) into the rule AND default-rule moment
+        tensors.  The fused path runs ONE kernelized scatter over an
+        [R+1]-row extension whose last row is the default rule (every
+        instance lands in a real row); stats_impl="onehot" keeps the
+        legacy pre-PR formulation of two dense one-hot updates."""
+        rc = self.rc
+        R = rc.max_rules
+        state = dict(state)
+        impl = default_impl() if rc.stats_impl == "auto" else rc.stats_impl
+        if impl == "onehot":
+            ridx = jnp.where(covered, first, R)              # R = discard
+            state["stats"] = rule_stats_update(
+                state["stats"], ridx, xbin, mom,
+                impl="onehot", attr_tile=rc.attr_tile)
+            d_seg = jnp.where(covered, 1, 0).astype(i32)
+            state["d_stats"] = rule_stats_update(
+                state["d_stats"][None], d_seg, xbin, mom,
+                impl="onehot", attr_tile=rc.attr_tile)[0]
+            return state
+        ext = jnp.concatenate([state["stats"], state["d_stats"][None]], 0)
+        seg = jnp.where(covered, first, R)                   # R = default row
+        ext = rule_stats_update(ext, seg, xbin, mom,
+                                impl=impl, attr_tile=rc.attr_tile)
+        state["stats"], state["d_stats"] = ext[:R], ext[R]
+        return state
+
     def _evict(self, state, drift):
         state = dict(state)
         state["active"] = state["active"] & ~drift
@@ -256,20 +315,40 @@ class AMRules:
         state["head_n"] = zero(state["head_n"])
         state["head_sum"] = zero(state["head_sum"])
         state["since"] = zero(state["since"])
-        state["stats"] = jax.tree.map(zero, state["stats"])
+        state["stats"] = zero(state["stats"])
         state["ph_m"] = zero(state["ph_m"])
         state["ph_min"] = zero(state["ph_min"])
         state["ph_err"] = zero(state["ph_err"])
         state["n_removed"] = state["n_removed"] + drift.sum().astype(i32)
         return state
 
+    def _gated_decision(self, stats, gate):
+        """The SDR cumsum + top-k over [..., m, bins] runs only when `gate`
+        holds -- exact, because the caller consumes the decision exclusively
+        under a mask that is all-False whenever the gate is closed.  Only
+        the statistics tensor crosses the lax.cond (the whole-state variant
+        measurably bloats the scanned step with buffer copies)."""
+        rc = self.rc
+        lead = stats.shape[:-3]
+
+        def closed(st):
+            return (jnp.zeros(lead, bool), jnp.zeros(lead, i32),
+                    jnp.zeros(lead, i32), jnp.zeros(lead, i32))
+
+        def open_(st):
+            return _expansion_decision(
+                st[..., CNT], st[..., SUM], st[..., SQ], rc)
+
+        if not rc.gate_expansions:
+            return open_(stats)
+        return jax.lax.cond(gate, open_, closed, stats)
+
     def _try_expand(self, state):
         """Rules with >= n_min fresh updates attempt an SDR expansion."""
         rc = self.rc
-        st = state["stats"]
-        ok, attr, tbin, op = _expansion_decision(
-            st["cnt"], st["sum"], st["sq"], rc)
         ready = state["active"] & (state["since"] >= rc.n_min)
+        ok, attr, tbin, op = self._gated_decision(
+            state["stats"], jnp.any(ready))
         room = state["pred_valid"].sum(-1) < rc.max_feats
         expand = ready & ok & room
         state = dict(state)
@@ -309,20 +388,19 @@ class AMRules:
         state["pred_op"] = jnp.where(sl_oh, op[:, None], state["pred_op"])
         state["pred_valid"] = state["pred_valid"] | sl_oh
         # expansion resets the rule's statistics (it now covers a subset)
-        zero = lambda a: jnp.where(
-            expand.reshape((-1,) + (1,) * (a.ndim - 1)), 0, a)
-        state["stats"] = jax.tree.map(zero, state["stats"])
+        state["stats"] = jnp.where(expand[:, None, None, None], 0.0,
+                                   state["stats"])
         state["n_feats"] = state["n_feats"] + expand.sum().astype(i32)
         return state
 
     def _try_default_expand(self, state):
-        """Default rule expansion creates a NEW rule (Alg: add to rule set)."""
+        """Default rule expansion creates a NEW rule (Alg: add to rule set).
+        The SDR decision is gated on the default rule's own grace period."""
         rc = self.rc
-        ds = state["d_stats"]
-        ok, attr, tbin, op = _expansion_decision(
-            ds["cnt"][None], ds["sum"][None], ds["sq"][None], rc)
-        ok, attr, tbin, op = ok[0], attr[0], tbin[0], op[0]
         ready = state["d_since"] >= rc.n_min
+        ok, attr, tbin, op = self._gated_decision(
+            state["d_stats"][None], ready)
+        ok, attr, tbin, op = ok[0], attr[0], tbin[0], op[0]
         free = ~state["active"]
         has_free = jnp.any(free)
         slot = jnp.argmax(free)                            # first free slot
@@ -346,19 +424,16 @@ class AMRules:
         state["head_sum"] = jnp.where(soh, d_mean, state["head_sum"])
         reset = lambda a, v=0.0: jnp.where(
             soh.reshape((-1,) + (1,) * (a.ndim - 1)), v, a)
-        state["stats"] = jax.tree.map(lambda a: reset(a), state["stats"])
+        state["stats"] = reset(state["stats"])
         state["since"] = reset(state["since"])
         state["ph_m"] = reset(state["ph_m"])
         state["ph_min"] = reset(state["ph_min"])
         state["ph_err"] = reset(state["ph_err"])
         # default rule restarts
-        dz = jax.tree.map(jnp.zeros_like, state["d_stats"])
-        state["d_stats"] = jax.tree.map(
-            lambda old, z: jnp.where(create, z, old), state["d_stats"], dz)
+        state["d_stats"] = jnp.where(create, 0.0, state["d_stats"])
         state["d_n"] = jnp.where(create, 0.0, state["d_n"])
         state["d_sum"] = jnp.where(create, 0.0, state["d_sum"])
         state["n_created"] = state["n_created"] + create.astype(i32)
-        state["n_rules"] = jnp.sum(state["active"].astype(i32))
         return state
 
     def run(self, state, x_stream, y_stream):
@@ -371,8 +446,7 @@ class AMRules:
 class VAMR(AMRules):
     """Vertical AMRules: statistics sharded by rule id; expansion feedback
     delayed.  Functionally == AMRules with delay>0; under the ShardMapEngine
-    the 'rules' axis shards over 'model' (see state_sharding in the
-    processor wrapper)."""
+    the 'rules' axis shards over 'model' (see state_sharding)."""
 
     def __init__(self, rc: RulesConfig):
         if rc.delay == 0:
@@ -391,7 +465,8 @@ class HAMR:
     Tensorized: the replica axis is a leading vmap axis for the
     aggregator-side phase (coverage + prediction + per-replica error);
     statistics updates then SUM across replicas (the key-grouped shuffle a
-    DSPE performs), and the shared rule structure stays replica-free.
+    DSPE performs) through the same rule_stats kernels as MAMR, and the
+    shared rule structure stays replica-free.
     """
 
     def __init__(self, rc: RulesConfig, replicas: int = 2):
@@ -403,6 +478,9 @@ class HAMR:
 
     def init(self, key=None):
         return init_rules(self.rc)
+
+    def state_sharding(self):
+        return self._inner.state_sharding()
 
     def step(self, state, xbin, y):
         rc = self.rc
@@ -433,41 +511,28 @@ class HAMR:
         flat_x = xs.reshape(Bs, -1)
         flat_y = ys.reshape(-1)
         merged = dict(state)
-        oh = jax.nn.one_hot(jnp.where(flat_cov, flat_first, R), R + 1,
-                            dtype=f32)[:, :R]
-        merged["head_n"] = state["head_n"] + oh.sum(0)
-        merged["head_sum"] = state["head_sum"] + (oh * flat_y[:, None]).sum(0)
-        merged["since"] = state["since"] + oh.sum(0)
-        binoh = jax.nn.one_hot(flat_x, rc.n_bins, dtype=f32)
         ridx = jnp.where(flat_cov, flat_first, R)
+        seg_sum = partial(jax.ops.segment_sum, segment_ids=ridx,
+                          num_segments=R + 1)
+        cnt = seg_sum(jnp.ones_like(flat_y))[:R]
+        merged["head_n"] = state["head_n"] + cnt
+        merged["head_sum"] = state["head_sum"] + seg_sum(flat_y)[:R]
+        merged["since"] = state["since"] + cnt
+        mom = rule_moments(flat_y)
+        merged = self._inner._scatter_stats(merged, flat_cov, flat_first,
+                                            flat_x, mom)
 
-        def pad_add(arr, val):
-            pad = jnp.zeros((1, *arr.shape[1:]), arr.dtype)
-            return jnp.concatenate([arr, pad], 0).at[ridx].add(val)[:R]
-
-        st = state["stats"]
-        merged["stats"] = {
-            "cnt": pad_add(st["cnt"], binoh),
-            "sum": pad_add(st["sum"], binoh * flat_y[:, None, None]),
-            "sq": pad_add(st["sq"], binoh * jnp.square(flat_y)[:, None, None]),
-        }
-
-        # ---- centralized default-rule learner ----------------------------
+        # ---- centralized default-rule learner (head) ---------------------
         w = (~flat_cov).astype(f32)
         merged["d_n"] = state["d_n"] + w.sum()
         merged["d_sum"] = state["d_sum"] + (w * flat_y).sum()
         merged["d_since"] = state["d_since"] + w.sum()
-        ds = state["d_stats"]
-        merged["d_stats"] = {
-            "cnt": ds["cnt"] + (binoh * w[:, None, None]).sum(0),
-            "sum": ds["sum"] + (binoh * (w * flat_y)[:, None, None]).sum(0),
-            "sq": ds["sq"] + (binoh * (w * jnp.square(flat_y))[:, None, None]).sum(0),
-        }
 
         # ---- shared expansion/drift machinery (delayed broadcast) --------
         merged = self._inner._apply_pending(merged)
         merged = self._inner._try_expand(merged)
         merged = self._inner._try_default_expand(merged)
+        merged["n_rules"] = jnp.sum(merged["active"].astype(i32))
 
         metrics = {"abs_err": abse.sum(), "sq_err": sqe.sum(),
                    "seen": jnp.asarray(Bs, f32),

@@ -9,6 +9,16 @@ instances a micro-batch k-means over micro-cluster centroids produces the
 macro-clusters -- exactly the paper's "triggered periodically, configured
 via a command line parameter (e.g. every 10 000 examples)".
 
+Performance (the fused/kernelized path):
+  * nearest-cluster search uses the MXU matmul identity
+    ||x - c||^2 = ||x||^2 + ||c||^2 - 2 x.c^T instead of materializing the
+    [B, K, d] broadcast difference (CluStreamConfig.stats_impl="onehot"
+    keeps the legacy broadcast + dense one-hot formulation as the oracle);
+  * the CF scatter is a segment-sum over the assignment ids -- no [B, K+1]
+    one-hot matmuls;
+  * the CluStream learner class scans the whole stream (one compiled
+    program) with the macro phase lax.cond-gated on the period boundary.
+
 Distribution: horizontal -- the stream shards over the data axis, each
 shard maintains local micro-clusters, and the macro phase merges them (a
 psum-style reduction), matching SAMOA's distributed CluStream design.
@@ -33,6 +43,16 @@ class CluStreamConfig:
     radius_factor: float = 2.0
     period: int = 10_000        # macro-clustering trigger (instances)
     kmeans_iters: int = 10
+    stats_impl: str = "auto"    # auto | segment (matmul+segment-sum) |
+                                # onehot (legacy broadcast + one-hot matmul)
+
+
+def _impl(cc: CluStreamConfig) -> str:
+    if cc.stats_impl == "auto":
+        return "segment"
+    if cc.stats_impl not in ("segment", "onehot"):
+        raise ValueError(f"unknown stats impl {cc.stats_impl!r}")
+    return cc.stats_impl
 
 
 def init_clustream(cc: CluStreamConfig, key, init_x=None):
@@ -65,11 +85,46 @@ def _radius(state):
     return jnp.sqrt(var.sum(-1))
 
 
+def pairwise_d2(x, c, impl: str = "segment"):
+    """[B, K] squared distances.  The fused path is one [B, d] x [d, K]
+    matmul plus rank-1 norms (MXU work); the legacy path materializes the
+    [B, K, d] broadcast difference."""
+    if impl == "onehot":
+        return jnp.sum(jnp.square(x[:, None] - c[None]), -1)
+    d2 = (jnp.sum(jnp.square(x), -1)[:, None]
+          + jnp.sum(jnp.square(c), -1)[None]
+          - 2.0 * x @ c.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def _cf_scatter(state, x, t, seg, cc: CluStreamConfig):
+    """Accumulate CF moments (n, LS, SS, LT, ST) by micro-cluster id.
+    seg: [B] in [0, K] with K = discard (outside every radius)."""
+    K = cc.n_micro
+    state = dict(state)
+    if _impl(cc) == "onehot":
+        oh = jax.nn.one_hot(seg, K + 1, dtype=f32)[:, :K]
+        state["n"] = state["n"] + oh.sum(0)
+        state["ls"] = state["ls"] + oh.T @ x
+        state["ss"] = state["ss"] + oh.T @ jnp.square(x)
+        state["lt"] = state["lt"] + oh.T @ t
+        state["st"] = state["st"] + oh.T @ jnp.square(t)
+        return state
+    seg_sum = lambda v: jax.ops.segment_sum(v, seg, num_segments=K + 1)[:K]
+    state["n"] = state["n"] + seg_sum(jnp.ones_like(t))
+    state["ls"] = state["ls"] + seg_sum(x)
+    state["ss"] = state["ss"] + seg_sum(jnp.square(x))
+    state["lt"] = state["lt"] + seg_sum(t)
+    state["st"] = state["st"] + seg_sum(jnp.square(t))
+    return state
+
+
 def update(state, x, cc: CluStreamConfig):
     """Online phase for a micro-batch x: [B, d]."""
     B = x.shape[0]
+    impl = _impl(cc)
     cent = _centroids(state)
-    d2 = jnp.sum(jnp.square(x[:, None] - cent[None]), -1)   # [B, K]
+    d2 = pairwise_d2(x, cent, impl)                          # [B, K]
     nearest = jnp.argmin(d2, -1)
     ndist = jnp.sqrt(jnp.take_along_axis(d2, nearest[:, None], 1)[:, 0])
     rad = _radius(state)[nearest] * cc.radius_factor + 1e-6
@@ -77,13 +132,8 @@ def update(state, x, cc: CluStreamConfig):
 
     t = state["t"] + jnp.arange(1, B + 1, dtype=f32)
     K = cc.n_micro
-    oh = jax.nn.one_hot(jnp.where(absorb, nearest, K), K + 1, dtype=f32)[:, :K]
-    state = dict(state)
-    state["n"] = state["n"] + oh.sum(0)
-    state["ls"] = state["ls"] + oh.T @ x
-    state["ss"] = state["ss"] + oh.T @ jnp.square(x)
-    state["lt"] = state["lt"] + oh.T @ t
-    state["st"] = state["st"] + oh.T @ jnp.square(t)
+    seg = jnp.where(absorb, nearest, K)
+    state = _cf_scatter(state, x, t, seg, cc)
 
     # non-absorbed instances replace the stalest micro-clusters (batch: the
     # first such instance wins; capacity-bounded replacement)
@@ -106,15 +156,16 @@ def update(state, x, cc: CluStreamConfig):
     return state
 
 
-def macro_cluster(state, cc: CluStreamConfig, key):
+def macro_cluster(state, cc: CluStreamConfig, key=None):
     """Micro-batch phase: weighted k-means over micro-cluster centroids."""
+    impl = _impl(cc)
     cent = _centroids(state)
     w = state["n"]
     k = cc.n_macro
     init = cent[jnp.argsort(-w)[:k]]
 
     def step(c, _):
-        d2 = jnp.sum(jnp.square(cent[:, None] - c[None]), -1)   # [K, k]
+        d2 = pairwise_d2(cent, c, impl)                      # [K, k]
         a = jnp.argmin(d2, -1)
         oh = jax.nn.one_hot(a, k, dtype=f32) * w[:, None]
         tot = oh.sum(0)
@@ -127,16 +178,68 @@ def macro_cluster(state, cc: CluStreamConfig, key):
 
 
 def merge(states):
-    """Merge shard-local micro-cluster states (distributed reduction)."""
-    return jax.tree.map(lambda *xs: sum(xs) if xs[0].ndim else xs[0],
-                        *states)
+    """Merge shard-local micro-cluster states (distributed reduction).
+
+    Every CF field is additive across disjoint stream shards -- including
+    the scalar clock `t`: each shard advanced its local clock by the
+    instances it absorbed, so the merged clock (and everything derived from
+    state["t"], like the timestamps handed to future updates) is the total
+    across shards, not shard 0's private count.  The `macro` centroids a
+    CluStream learner state carries are NOT additive; they are taken from
+    the first shard and callers should re-run macro_cluster on the merged
+    CF state (the paper's macro phase after the shard reduction).
+    """
+    cf = [{k: v for k, v in s.items() if k != "macro"} for s in states]
+    out = jax.tree.map(lambda *xs: sum(xs), *cf)
+    if "macro" in states[0]:
+        out["macro"] = states[0]["macro"]
+    return out
 
 
 def assign(centers, x):
-    d2 = jnp.sum(jnp.square(x[:, None] - centers[None]), -1)
-    return jnp.argmin(d2, -1)
+    return jnp.argmin(pairwise_d2(x, centers), -1)
 
 
 def ssq(centers, x):
-    d2 = jnp.sum(jnp.square(x[:, None] - centers[None]), -1)
-    return jnp.min(d2, -1).sum()
+    return jnp.min(pairwise_d2(x, centers), -1).sum()
+
+
+class CluStream:
+    """Functional CluStream learner: state pytree + pure step, scan-able.
+
+    The online CF phase runs every micro-batch; the macro k-means is
+    lax.cond-gated on the period boundary (the paper's periodic trigger),
+    so the whole stream compiles into one program on the scanned engines.
+    State carries the latest macro centroids; metrics report the batch's
+    sum of squared distances to them.
+    """
+
+    def __init__(self, cc: CluStreamConfig):
+        self.cc = cc
+
+    def init(self, key=None):
+        key = jax.random.PRNGKey(0) if key is None else key
+        state = init_clustream(self.cc, key)
+        state["macro"] = _centroids(state)[: self.cc.n_macro]
+        return state
+
+    def step(self, state, x):
+        cc = self.cc
+        t0 = state["t"]
+        state = dict(state)
+        macro_prev = state.pop("macro")
+        state = update(state, x, cc)
+        crossed = (t0 // cc.period) != (state["t"] // cc.period)
+        state["macro"] = jax.lax.cond(
+            crossed, lambda s: macro_cluster(s, cc), lambda s: macro_prev,
+            state)
+        metrics = {"seen": jnp.asarray(x.shape[0], f32),
+                   "ssq": ssq(state["macro"], x),
+                   "n_active": jnp.sum((state["n"] >= 1.0).astype(f32))}
+        return state, metrics
+
+    def run(self, state, x_stream):
+        def body(st, xb):
+            st, m = self.step(st, xb)
+            return st, m
+        return jax.lax.scan(body, state, x_stream)

@@ -9,6 +9,15 @@ change detector per member; on drift the member is reset (ADWIN bagging).
 Base learner: the tensorized Hoeffding tree (vmap'd across members) --
 these are the meta-algorithms SAMOA pairs with external single-machine
 classifiers; here the base is our own tree, pluggable via init/step fns.
+
+Performance (the fused/kernelized path): per-member statistics updates
+already dispatch through repro.kernels.vht_stats inside the vmap (the
+tree's stats_impl knob).  The split machinery is hoisted OUT of the vmap
+and lax.cond-gated on ANY member having a due leaf
+(EnsembleConfig.gate_members) -- gating inside the vmap would be useless,
+since vmap turns lax.cond into a select that executes both branches.  The
+fresh-tree reset constant is built once at construction instead of inside
+the (scanned) step.
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ class EnsembleConfig:
     n_members: int = 10
     boost: bool = False
     detector: str = "adwin"      # adwin | ddm | eddm | ph | none
+    gate_members: bool = True    # lax.cond-gate split work on any member due
 
 
 class OzaEnsemble:
@@ -41,6 +51,13 @@ class OzaEnsemble:
         self.tc = ec.tree
         self._vht = VHT(VHTConfig(self.tc))
         self._ac = detectors.AdwinConfig()
+        # the drift-reset target is a constant of the config: build it once
+        # instead of re-materializing it inside every (scanned) step
+        self._fresh = htree.init_tree(self.tc)
+        # inside the member vmap the gate must stay open (vmap lowers
+        # lax.cond to a both-branches select); the cross-member gate below
+        # is the real one
+        self._tc_inner = dataclasses.replace(self.tc, gate_splits=False)
 
     def _det_init(self):
         d = self.ec.detector
@@ -70,11 +87,9 @@ class OzaEnsemble:
         return dst, jnp.zeros((self.ec.n_members,), bool)
 
     def init(self, key):
-        one = htree.init_tree(self.tc)
-        trees = jax.tree.map(lambda x: jnp.stack([x] * self.ec.n_members), one)
-        return {"trees": trees, "det": self._det_init(),
-                "lam_sc": jnp.ones((self.ec.n_members,), f32),
-                "key": key}
+        trees = jax.tree.map(lambda x: jnp.stack([x] * self.ec.n_members),
+                             self._fresh)
+        return {"trees": trees, "det": self._det_init(), "key": key}
 
     def step(self, state, xbin, y):
         ec, tc = self.ec, self.tc
@@ -101,32 +116,48 @@ class OzaEnsemble:
                 [jnp.zeros((1, member_err.shape[1])), cum_err[:-1]], 0)
         w = jax.random.poisson(k1, lam, (M, xbin.shape[0])).astype(f32)
 
-        # --- train members (vmap) ----------------------------------------
+        # --- train members: statistics (vmap, kernelized scatter) ---------
         def train_one(tree, wts):
             leaf = htree.route(tree, xbin, tc)
-            tree2 = htree.update_stats(tree, leaf, xbin, y, wts, tc)
-            should, battr, bbin = htree.decide_splits(tree2, tc)
-            tree2 = dict(tree2)
-            att = (tree2["split_attr"] < 0) & (tree2["since_attempt"] >= tc.n_min)
-            tree2["since_attempt"] = jnp.where(att, 0.0, tree2["since_attempt"])
-            tree2, _ = htree.apply_splits(tree2, should, battr, bbin, tc)
-            return tree2
+            return htree.update_stats(tree, leaf, xbin, y, wts, tc)
         trees = jax.vmap(train_one)(state["trees"], w)
+
+        # --- split checks, gated across members ---------------------------
+        # exact: a member with no due leaf produces all-False should-split,
+        # so skipping the whole vmapped decide/apply is an identity
+        tci = self._tc_inner
+
+        def split_all(ts):
+            def split_one(tree):
+                should, battr, bbin = htree.decide_splits(tree, tci)
+                tree = dict(tree)
+                att = (tree["split_attr"] < 0) & \
+                    (tree["since_attempt"] >= tc.n_min)
+                tree["since_attempt"] = jnp.where(att, 0.0,
+                                                  tree["since_attempt"])
+                tree, _ = htree.apply_splits(tree, should, battr, bbin, tci)
+                return tree
+            return jax.vmap(split_one)(ts)
+
+        if ec.gate_members:
+            any_due = jnp.any((trees["split_attr"] < 0)
+                              & (trees["since_attempt"] >= tc.n_min))
+            trees = jax.lax.cond(any_due, split_all, lambda ts: ts, trees)
+        else:
+            trees = split_all(trees)
 
         # --- change detection: reset drifted members ----------------------
         det = state["det"]
         if det is not None:
             member_err_rate = (votes != y[None]).astype(f32).mean(-1)
             det, drift = self._det_update(det, member_err_rate)
-            fresh = htree.init_tree(tc)
             def reset_member(old, fr):
                 return jnp.where(
                     drift.reshape((-1,) + (1,) * (old.ndim - 1)), fr[None], old)
-            trees = jax.tree.map(reset_member, trees, fresh)
+            trees = jax.tree.map(reset_member, trees, self._fresh)
         n_drift = drift.sum() if det is not None else jnp.zeros((), i32)
 
-        new_state = {"trees": trees, "det": det, "lam_sc": state["lam_sc"],
-                     "key": key}
+        new_state = {"trees": trees, "det": det, "key": key}
         metrics = {"correct": correct, "seen": jnp.asarray(y.shape[0], f32),
                    "drifts": n_drift.astype(f32)}
         return new_state, metrics

@@ -10,13 +10,22 @@ import numpy as np
 import pytest
 
 from repro.core.engines import JitEngine, LocalEngine
-from repro.data.generators import RandomTreeGenerator, bin_numeric
+from repro.data.generators import (ElectricityLikeGenerator,
+                                   RandomTreeGenerator, bin_numeric)
+from repro.kernels.rule_stats.ops import (rule_moments, rule_stats_update,
+                                          rule_stats_update_segment)
+from repro.kernels.rule_stats.ref import rule_stats_ref
 from repro.kernels.vht_stats.ops import stats_update, stats_update_segment
 from repro.kernels.vht_stats.ref import stats_update_ref
+from repro.ml import clustream
+from repro.ml.amrules import AMRules, HAMR, RulesConfig, VAMR
+from repro.ml.clustream import CluStream, CluStreamConfig
+from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
 from repro.ml.htree import TreeConfig
 from repro.ml.vht import VHT, VHTConfig, build_vht_topology
 
 TC = TreeConfig(n_attrs=20, n_bins=8, n_classes=2, max_nodes=127, n_min=100)
+RC = RulesConfig(n_attrs=12, n_bins=8, max_rules=32, n_min=150)
 
 
 @pytest.fixture(scope="module")
@@ -176,6 +185,284 @@ def test_gated_check_tile_overflow_fallback(dense_stream):
     s1, _ = jax.jit(tiny.run)(tiny.init(), xs, ys)
     s0, _ = jax.jit(plain.run)(plain.init(), xs, ys)
     _assert_trees_identical(s1, s0)
+
+
+# ------------------------- rule stats == one-hot reference -----------------
+
+@pytest.mark.parametrize("impl", ["segment", "pallas"])
+@pytest.mark.parametrize("R", [1, 16])
+def test_rule_stats_matches_onehot_ref(impl, R):
+    """Parity of the kernelized weighted-moments scatter (segment and
+    Pallas-interpret) vs the legacy dense one-hot oracle, including the
+    seg == R discard row and the R == 1 default-rule fast path."""
+    m, nb, B = 11, 8, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    stats = jax.random.uniform(ks[0], (R, m, nb, 3)) * 5
+    seg = jax.random.randint(ks[1], (B,), 0, R + 1)     # R = discard
+    xbin = jax.random.randint(ks[2], (B, m), 0, nb)
+    mom = rule_moments(jax.random.uniform(ks[3], (B,)) * 2 - 1)
+    out = rule_stats_update(stats, seg, xbin, mom, impl=impl)
+    ref = rule_stats_ref(stats, seg, xbin, mom)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="auto resolves to the Pallas kernel on TPU")
+def test_rule_stats_auto_impl_off_tpu_is_segment():
+    R, m, nb, B = 8, 5, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    stats = jnp.zeros((R, m, nb, 3))
+    seg = jax.random.randint(ks[0], (B,), 0, R + 1)
+    xbin = jax.random.randint(ks[1], (B, m), 0, nb)
+    mom = rule_moments(jax.random.uniform(ks[2], (B,)))
+    out = rule_stats_update(stats, seg, xbin, mom)      # impl="auto"
+    seg_out = rule_stats_update_segment(stats, seg, xbin, mom)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(seg_out))
+
+
+@pytest.fixture(scope="module")
+def reg_stream():
+    gen = ElectricityLikeGenerator()
+    key = jax.random.PRNGKey(1)
+    xs, ys = [], []
+    for _ in range(25):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, 256)
+        xs.append(bin_numeric(x, 8))
+        ys.append(y.astype(jnp.float32))
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+def _amrules_variants():
+    return [("MAMR", AMRules), ("VAMR", VAMR),
+            ("HAMR-2", lambda rc: HAMR(rc, replicas=2))]
+
+
+@pytest.mark.parametrize("name,mk", _amrules_variants())
+def test_amrules_scanned_bit_identical_to_step_loop(reg_stream, name, mk):
+    """The fused lax.scan run of every AMRules variant equals the jitted
+    per-step loop bit for bit -- state and metrics."""
+    xs, ys = reg_stream
+    learner = mk(RC)
+    st = learner.init()
+    step = jax.jit(learner.step)
+    ms = []
+    for i in range(xs.shape[0]):
+        st, m = step(st, xs[i], ys[i])
+        ms.append(m)
+    ms = jax.tree.map(lambda *z: jnp.stack(z), *ms)
+    st2, ms2 = jax.jit(learner.run)(learner.init(), xs, ys)
+    _assert_trees_identical(st, st2)
+    _assert_trees_identical(ms, ms2)
+
+
+@pytest.mark.parametrize("name,mk", _amrules_variants())
+def test_amrules_gated_expansions_bit_identical_to_ungated(reg_stream,
+                                                           name, mk):
+    """lax.cond-gating the SDR expansion checks on the grace period must
+    not change a single bit of the learned rule set."""
+    xs, ys = reg_stream
+    gated = mk(RC)
+    plain = mk(dataclasses.replace(RC, gate_expansions=False))
+    s1, m1 = jax.jit(gated.run)(gated.init(), xs, ys)
+    s0, m0 = jax.jit(plain.run)(plain.init(), xs, ys)
+    assert int(s1["n_created"]) > 0              # expansions actually fired
+    _assert_trees_identical(s1, s0)
+    _assert_trees_identical(m1, m0)
+
+
+def test_amrules_segment_stats_match_onehot_oracle(reg_stream):
+    """With expansions out of the picture (huge n_min) the kernelized
+    statistics path accumulates the same moments as the legacy dense
+    one-hot formulation."""
+    xs, ys = reg_stream
+    rc = dataclasses.replace(RC, n_min=10**9)
+    seg = AMRules(rc)
+    one = AMRules(dataclasses.replace(rc, stats_impl="onehot"))
+    s1, _ = jax.jit(seg.run)(seg.init(), xs[:5], ys[:5])
+    s0, _ = jax.jit(one.run)(one.init(), xs[:5], ys[:5])
+    np.testing.assert_allclose(np.asarray(s1["stats"]),
+                               np.asarray(s0["stats"]), rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1["d_stats"]),
+                               np.asarray(s0["d_stats"]), rtol=1e-5, atol=1e-3)
+
+
+# ------------------------- ensemble gating ---------------------------------
+
+@pytest.fixture(scope="module")
+def cls_stream():
+    gen = RandomTreeGenerator(n_cat=5, n_num=5, depth=4, seed=5)
+    key = jax.random.PRNGKey(0)
+    xs, ys = [], []
+    for _ in range(20):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, 128)
+        xs.append(bin_numeric(x, 8))
+        ys.append(y)
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+ETC = TreeConfig(n_attrs=10, n_bins=8, n_classes=2, max_nodes=63, n_min=64)
+
+
+def test_ensemble_scanned_bit_identical_to_step_loop(cls_stream):
+    xs, ys = cls_stream
+    ens = OzaEnsemble(EnsembleConfig(tree=ETC, n_members=4))
+    st = ens.init(jax.random.PRNGKey(0))
+    step = jax.jit(ens.step)
+    for i in range(xs.shape[0]):
+        st, _ = step(st, xs[i], ys[i])
+    st2, _ = jax.jit(ens.run)(ens.init(jax.random.PRNGKey(0)), xs, ys)
+    _assert_trees_identical(st, st2)
+
+
+def test_ensemble_gated_members_bit_identical_to_ungated(cls_stream):
+    """Gating the per-member split machinery on ANY member being due must
+    not change a single bit of any member tree."""
+    xs, ys = cls_stream
+    ec = EnsembleConfig(tree=ETC, n_members=4)
+    gated = OzaEnsemble(ec)
+    plain = OzaEnsemble(dataclasses.replace(ec, gate_members=False))
+    s1, _ = jax.jit(gated.run)(gated.init(jax.random.PRNGKey(0)), xs, ys)
+    s0, _ = jax.jit(plain.run)(plain.init(jax.random.PRNGKey(0)), xs, ys)
+    assert int(s1["trees"]["n_splits"].sum()) > 0   # splits actually fired
+    _assert_trees_identical(s1, s0)
+
+
+# ------------------------- clustream ---------------------------------------
+
+@pytest.fixture(scope="module")
+def blob_stream():
+    key = jax.random.PRNGKey(0)
+    centers = jnp.stack([jnp.full((8,), v) for v in (0.2, 0.5, 0.8)])
+    xs = []
+    for _ in range(15):
+        key, k1, k2 = jax.random.split(key, 3)
+        c = jax.random.randint(k1, (128,), 0, 3)
+        xs.append(centers[c] + 0.03 * jax.random.normal(k2, (128, 8)))
+    return jnp.stack(xs)
+
+
+CC = CluStreamConfig(n_dims=8, n_micro=32, n_macro=3, period=512)
+
+
+def test_clustream_scanned_bit_identical_to_step_loop(blob_stream):
+    """The scanned CluStream run (with its period-gated macro phase)
+    equals the eager per-batch step loop bit for bit."""
+    cs = CluStream(CC)
+    st, ms = jax.jit(cs.run)(cs.init(), blob_stream)
+    st2 = cs.init()
+    step = jax.jit(cs.step)
+    for i in range(blob_stream.shape[0]):
+        st2, _ = step(st2, blob_stream[i])
+    _assert_trees_identical(st, st2)
+    # the macro phase fired at least once (period < stream length)
+    assert float(st["t"]) > CC.period
+
+
+def test_clustream_cf_scatter_segment_matches_onehot(blob_stream):
+    """Given identical assignments, the segment-sum CF scatter equals the
+    legacy one-hot matmul formulation (including the discard row K)."""
+    st = clustream.init_clustream(CC, jax.random.PRNGKey(1))
+    x = blob_stream[0]
+    seg = jax.random.randint(jax.random.PRNGKey(2), (x.shape[0],), 0,
+                             CC.n_micro + 1)
+    t = jnp.arange(1, x.shape[0] + 1, dtype=jnp.float32)
+    a = clustream._cf_scatter(st, x, t, seg, CC)
+    b = clustream._cf_scatter(
+        st, x, t, seg, dataclasses.replace(CC, stats_impl="onehot"))
+    for k in ("n", "ls", "ss", "lt", "st"):
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-5, atol=1e-4, err_msg=k)
+
+
+def test_clustream_matmul_distance_matches_broadcast(blob_stream):
+    x = blob_stream[0]
+    c = blob_stream[1][:10]
+    d_mat = clustream.pairwise_d2(x, c)
+    d_ref = clustream.pairwise_d2(x, c, impl="onehot")
+    np.testing.assert_allclose(np.asarray(d_mat), np.asarray(d_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_clustream_merge_sums_scalar_clock():
+    """The distributed merge must not silently take shard 0's clock, and
+    must not sum the non-additive macro centroids of learner states."""
+    cs = CluStream(CC)
+    s1 = dict(cs.init(jax.random.PRNGKey(0)))
+    s2 = dict(cs.init(jax.random.PRNGKey(1)))
+    s1["t"] = jnp.asarray(100.0)
+    s2["t"] = jnp.asarray(40.0)
+    merged = clustream.merge([s1, s2])
+    assert float(merged["t"]) == 140.0
+    np.testing.assert_allclose(np.asarray(merged["ls"]),
+                               np.asarray(s1["ls"] + s2["ls"]))
+    np.testing.assert_array_equal(np.asarray(merged["macro"]),
+                                  np.asarray(s1["macro"]))
+
+
+# ------------------------- engines on bare learners ------------------------
+
+def test_jit_engine_scans_bare_learner_stream(reg_stream):
+    """run_stream accepts a plain learner (no hand-wired topology) and its
+    scanned execution equals the eager jitted step loop bit for bit."""
+    xs, ys = reg_stream
+    amr = AMRules(RC)
+    eng = JitEngine()
+    carry = eng.init(amr, jax.random.PRNGKey(0))
+    carry, outs = eng.run_stream(amr, carry, {"x": xs, "y": ys})
+
+    st = amr.init()
+    step = jax.jit(amr.step)
+    ms = []
+    for i in range(xs.shape[0]):
+        st, m = step(st, xs[i], ys[i])
+        ms.append(m)
+    ms = jax.tree.map(lambda *z: jnp.stack(z), *ms)
+    _assert_trees_identical(carry["states"]["amrules"], st)
+    _assert_trees_identical(outs["metrics"], ms)
+
+
+def test_local_engine_runs_bare_learner(reg_stream):
+    xs, ys = reg_stream
+    amr = AMRules(RC)
+    eng = LocalEngine()
+    states = eng.init(amr, jax.random.PRNGKey(0))
+    states, outs = eng.run_stream(amr, states, {"x": xs[:3], "y": ys[:3]})
+    assert isinstance(outs, list) and len(outs) == 3
+    assert outs[0]["metrics"]["seen"] == ys.shape[1]
+
+
+def test_shard_map_engine_shards_bare_learner_state(reg_stream):
+    """ShardMapEngine.init must wrap a bare learner BEFORE sharding its
+    state (regression: it used to hand the learner itself to
+    _shard_states) and honour the learner's state_sharding hint."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core.engines import ShardMapEngine
+    xs, ys = reg_stream
+    mesh = jax.make_mesh((1, 1), ("model", "data"))
+    vamr = VAMR(RC)
+    eng = ShardMapEngine(mesh)
+    carry = eng.init(vamr, jax.random.PRNGKey(0))
+    spec = carry["states"]["vamr"]["stats"].sharding.spec
+    assert spec == P("model", None, None, None)
+    carry, outs = eng.run_stream(vamr, carry, {"x": xs[:4], "y": ys[:4]})
+    assert outs["metrics"]["seen"].shape == (4,)
+
+
+def test_jit_engine_scans_clustream_without_labels(blob_stream):
+    """Payloads without 'y' (clustering) flow through the learner adapter,
+    and the scanned engine path equals the per-step engine path."""
+    cs = CluStream(CC)
+    eng = JitEngine()
+    carry = eng.init(cs, jax.random.PRNGKey(0))
+    carry, outs = eng.run_stream(cs, carry, {"x": blob_stream})
+    assert outs["metrics"]["ssq"].shape == (blob_stream.shape[0],)
+    eng2 = JitEngine()
+    carry2 = eng2.init(cs, jax.random.PRNGKey(0))
+    for i in range(blob_stream.shape[0]):
+        carry2, _ = eng2.step(cs, carry2, {"x": blob_stream[i]})
+    _assert_trees_identical(carry["states"], carry2["states"])
 
 
 # ------------------------- wk(z) drop accounting ---------------------------
