@@ -10,7 +10,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (best_of, make_stream,
+from benchmarks.common import (assert_sharded, best_of, make_stream,
+                               run_prequential_engine,
                                run_prequential_scanned, state_bytes)
 from repro.data.generators import ElectricityLikeGenerator, WaveformGenerator
 from repro.ml.amrules import AMRules, HAMR, RulesConfig, VAMR
@@ -153,7 +154,55 @@ def fused_speedup(fast=True):
                  f"speedup={dt0/dt1:.1f}x;mae0={mae0:.4f};mae1={mae1:.4f}")
 
 
-def main(fast=True):
+def sharded_speedup(fast=True):
+    """Sharded VAMR arms on the multi-device CPU mesh (run.py --sharded
+    forces 8 virtual host devices): the SAME scanned stream program with
+    every per-rule tensor partitioned over 'model' vs single-device.  On
+    one physical CPU the collectives are pure overhead, so the ratio
+    measures the sharding tax the GSPMD program pays, not a speedup --
+    the arm exists to track that the partitioned program stays correct
+    and how far its dispatch cost is from the fused single-device scan."""
+    from repro.core.engines import JitEngine, ShardMapEngine
+    from repro.launch.mesh import make_stream_mesh
+
+    n = jax.device_count()
+    mesh = make_stream_mesh("model")
+    eng0, eng1 = JitEngine(), ShardMapEngine(mesh)
+    for tag, gen, m in DATASETS[: 1 if fast else 2]:
+        B = 512
+        n_b = 30 if fast else 80
+        xs, ys = make_stream(gen, n_b, B, 8, classification=False)
+        ys = ys.astype(jnp.float32)
+        rc = RulesConfig(n_attrs=m, n_bins=8, max_rules=64, n_min=200)
+        vamr = VAMR(rc)
+        assert_sharded(eng1, vamr, ("vamr", "stats"), mesh.shape["model"])
+        for eng in (eng0, eng1):      # compile once; best_of just re-times
+            run_prequential_engine(eng, vamr, xs, ys)
+        mae0, thr0, dt0 = best_of(
+            lambda: run_prequential_engine(eng0, vamr, xs, ys, warm=False))
+        mae1, thr1, dt1 = best_of(
+            lambda: run_prequential_engine(eng1, vamr, xs, ys, warm=False))
+        BENCH[f"sharded.{tag}-B{B}.VAMR"] = {
+            "n_batches": int(n_b), "batch": int(B),
+            "devices": int(n), "mesh": f"model={mesh.shape['model']}",
+            "before": {"us_per_batch": dt0 / n_b * 1e6, "inst_per_s": thr0,
+                       "mae": mae0, "path": "JitEngine scan, single device"},
+            "after": {"us_per_batch": dt1 / n_b * 1e6, "inst_per_s": thr1,
+                      "mae": mae1,
+                      "path": "ShardMapEngine scan, rules axis over "
+                              f"model={mesh.shape['model']}"},
+            "speedup": dt0 / dt1,
+        }
+        emit(f"sharded.{tag}-B{B}.VAMR", dt1 / n_b * 1e6,
+             f"devices={n};unsharded_us={dt0/n_b*1e6:.0f};"
+             f"sharded_us={dt1/n_b*1e6:.0f};ratio={dt0/dt1:.2f}x;"
+             f"mae0={mae0:.4f};mae1={mae1:.4f}")
+
+
+def main(fast=True, sharded=False):
+    if sharded:
+        sharded_speedup(fast)
+        return ROWS
     fig12_throughput(fast)
     fig1416_error(fast)
     tab67_memory(fast)

@@ -82,6 +82,48 @@ def run_prequential_scanned(learner, xs, ys):
     return _metric(corr, abse, seen), seen / dt, dt
 
 
+def assert_sharded(engine, learner, leaf_path, n_shards):
+    """Fail loudly if the learner's hinted state does NOT come out
+    partitioned on this engine's mesh (e.g. an axis the device count does
+    not divide silently falls back to replication) -- a sharded benchmark
+    arm must never publish replicated numbers under a sharded label."""
+    carry = engine.init(learner, jax.random.PRNGKey(0))
+    leaf = carry["states"]
+    for k in leaf_path:
+        leaf = leaf[k]
+    # Shard.index is a tuple of slices (unhashable): key on its repr
+    shards = len({str(s.index) for s in leaf.addressable_shards})
+    if shards != n_shards:
+        raise RuntimeError(
+            f"{'.'.join(leaf_path)} is split {shards} ways, expected "
+            f"{n_shards}: sharding hint fell back to replication")
+
+
+def run_prequential_engine(engine, learner, xs, ys=None, *, warm=True):
+    """Whole-stream execution through an Engine (run_stream scan), timed
+    after a warm run so compile cost is excluded -- the engine-path
+    sibling of run_prequential_scanned, usable with ShardMapEngine to
+    measure sharded arms.  warm=False skips the warm execution for
+    callers that already ran this engine/learner pair (the compiled scan
+    is cached per engine), e.g. re-measuring under best_of.
+    Returns (final_acc_or_err, thr inst/s, wall s)."""
+    payload = {"x": xs} if ys is None else {"x": xs, "y": ys}
+    if warm:
+        carry = engine.init(learner, jax.random.PRNGKey(0))
+        carry, _ = engine.run_stream(learner, carry, payload)
+        jax.block_until_ready(jax.tree.leaves(carry)[0])
+    carry = engine.init(learner, jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    carry, outs = engine.run_stream(learner, carry, payload)
+    jax.block_until_ready(jax.tree.leaves(carry)[0])
+    dt = time.perf_counter() - t0
+    ms = outs["metrics"]
+    corr = float(ms["correct"].sum()) if "correct" in ms else 0.0
+    abse = float(ms["abs_err"].sum()) if "abs_err" in ms else 0.0
+    seen = float(ms["seen"].sum())
+    return _metric(corr, abse, seen), seen / dt, dt
+
+
 def _wants_key(learner):
     import inspect
     sig = inspect.signature(learner.init)

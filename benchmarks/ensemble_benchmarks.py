@@ -16,7 +16,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (best_of, make_stream, run_prequential,
+from benchmarks.common import (assert_sharded, best_of, make_stream,
+                               run_prequential, run_prequential_engine,
                                run_prequential_scanned)
 from repro.data.generators import RandomTreeGenerator
 from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
@@ -70,6 +71,56 @@ def fused_speedup(fast=True):
              f"speedup={dt0/dt1:.1f}x;acc0={acc0:.3f};acc1={acc1:.3f}")
 
 
-def main(fast=True):
+def sharded_speedup(fast=True):
+    """Sharded OzaBag arm on the multi-device CPU mesh (run.py --sharded
+    forces 8 virtual host devices): the member axis partitions over
+    'data', one tree per device, vs the same scanned stream on a single
+    device.  See amrules_benchmarks.sharded_speedup for why the ratio
+    measures the sharding tax on one physical CPU rather than a speedup."""
+    from repro.core.engines import JitEngine, ShardMapEngine
+    from repro.launch.mesh import make_stream_mesh
+
+    n = jax.device_count()
+    mesh = make_stream_mesh("data")
+    eng0, eng1 = JitEngine(), ShardMapEngine(mesh)
+    n_b = 20 if fast else 50
+    m, M = 20, mesh.shape["data"]     # one member per device, any mesh
+    half = m // 2
+    gen = RandomTreeGenerator(n_cat=half, n_num=m - half, depth=6)
+    xs, ys = make_stream(gen, n_b, 128, 8)
+    tc = TreeConfig(n_attrs=m, n_bins=8, n_classes=2, max_nodes=255,
+                    n_min=200)
+    ens = OzaEnsemble(EnsembleConfig(tree=tc, n_members=M))
+    assert_sharded(eng1, ens, ("ozaensemble", "trees", "stats"),
+                   mesh.shape["data"])
+    for eng in (eng0, eng1):          # compile once; best_of just re-times
+        run_prequential_engine(eng, ens, xs, ys)
+    acc0, thr0, dt0 = best_of(
+        lambda: run_prequential_engine(eng0, ens, xs, ys, warm=False))
+    acc1, thr1, dt1 = best_of(
+        lambda: run_prequential_engine(eng1, ens, xs, ys, warm=False))
+    tag = f"sharded.bag-m{m}-M{M}"
+    BENCH[tag] = {
+        "n_batches": int(n_b), "batch": int(ys.shape[1]),
+        "n_members": int(M),
+        "devices": int(n), "mesh": f"data={mesh.shape['data']}",
+        "before": {"us_per_batch": dt0 / n_b * 1e6, "inst_per_s": thr0,
+                   "acc": acc0, "path": "JitEngine scan, single device"},
+        "after": {"us_per_batch": dt1 / n_b * 1e6, "inst_per_s": thr1,
+                  "acc": acc1,
+                  "path": "ShardMapEngine scan, member axis over "
+                          f"data={mesh.shape['data']}"},
+        "speedup": dt0 / dt1,
+    }
+    emit(tag, dt1 / n_b * 1e6,
+         f"devices={n};unsharded_us={dt0/n_b*1e6:.0f};"
+         f"sharded_us={dt1/n_b*1e6:.0f};ratio={dt0/dt1:.2f}x;"
+         f"acc0={acc0:.3f};acc1={acc1:.3f}")
+
+
+def main(fast=True, sharded=False):
+    if sharded:
+        sharded_speedup(fast)
+        return ROWS
     fused_speedup(fast)
     return ROWS

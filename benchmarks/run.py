@@ -9,7 +9,13 @@ BENCH_clustream.json, ensemble -> BENCH_ensemble.json; --bench-json
 relocates the VHT file for backward compatibility) so the trajectory is
 tracked PR over PR.
 
-  PYTHONPATH=src python -m benchmarks.run [--full|--fast] \
+--sharded forces 8 virtual host devices (the flag must land before jax
+initializes, which is why the suite modules are imported lazily below)
+and runs ONLY the sharded arms -- VAMR with its rule axis over 'model'
+and OzaBag with its member axis over 'data' -- merging the resulting
+``sharded.*`` arms into the existing BENCH json instead of replacing it.
+
+  PYTHONPATH=src python -m benchmarks.run [--full|--fast] [--sharded] \
       [--only vht|amrules|clustream|ensemble|lm|kernels]
 """
 
@@ -17,7 +23,10 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+SHARDED_DEVICES = 8
 
 
 def main() -> None:
@@ -26,10 +35,19 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="fast mode (the default; overrides --full)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the multi-device sharded arms on "
+                         f"{SHARDED_DEVICES} forced host devices")
     ap.add_argument("--bench-json", default="BENCH_vht.json",
                     help="where to write the structured VHT numbers")
     args = ap.parse_args()
     fast = args.fast or not args.full
+
+    if args.sharded:
+        from repro.launch.mesh import force_host_devices
+        if not force_host_devices(SHARDED_DEVICES):
+            sys.exit("--sharded must set XLA_FLAGS before jax initializes "
+                     "its backends; run in a fresh process")
 
     from benchmarks import (amrules_benchmarks, clustream_benchmarks,
                             ensemble_benchmarks, kernel_benchmarks,
@@ -43,13 +61,22 @@ def main() -> None:
         "lm": lm_roofline,
         "kernels": kernel_benchmarks,
     }
+    if args.sharded:
+        suites = {k: v for k, v in suites.items()
+                  if k in ("amrules", "ensemble")}
     if args.only:
+        if args.only not in suites:
+            sys.exit(f"unknown suite {args.only!r} "
+                     f"(available: {', '.join(suites)})")
         suites = {args.only: suites[args.only]}
     print("name,us_per_call,derived")
     failed = set()
     for name, mod in suites.items():
         try:
-            mod.main(fast=fast)
+            if args.sharded:
+                mod.main(fast=fast, sharded=True)
+            else:
+                mod.main(fast=fast)
         except Exception as e:  # keep the harness going, flag the suite
             failed.add(name)
             print(f"{name}.SUITE_FAILED,0,{type(e).__name__}:{e}", flush=True)
@@ -67,6 +94,22 @@ def main() -> None:
         else:
             path = f"BENCH_{name}.json"
             payload = {"arms": bench, "mode": mode}
+            # the sharded and regular arms are produced by different
+            # processes (the device-count flag must precede jax init), so
+            # each write preserves the other family's arms
+            if os.path.exists(path):
+                try:
+                    with open(path) as f:
+                        old = json.load(f)
+                    if args.sharded:
+                        old.setdefault("arms", {}).update(bench)
+                        payload = old
+                    else:
+                        for k, v in old.get("arms", {}).items():
+                            if k.startswith("sharded."):
+                                payload["arms"].setdefault(k, v)
+                except (OSError, ValueError):
+                    pass
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {path}", flush=True)

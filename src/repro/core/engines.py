@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.topology import (Grouping, Topology, build_learner_topology)
+from repro.distributed.sharding import leading_axis_spec, mesh_context
 
 
 class Engine:
@@ -284,17 +285,69 @@ class ShardMapEngine(JitEngine):
     that Storm/Samza would perform as network shuffles.  run_stream scans
     the whole stream inside the mesh context, so the collectives compile
     once for all N micro-batches.
+
+    Processor `state_sharding` hints are enforced twice: `init` places the
+    state per-shard (device_put), and every scanned step re-constrains the
+    hinted leaves (with_sharding_constraint), so the carry cannot silently
+    collapse to replicated mid-stream however XLA propagates the rest.
+    Hints that do not fit the mesh (unknown axis, or a dimension the axis
+    size does not divide) fall back to replication for that leaf instead of
+    failing, so one learner config runs on any mesh shape.
     """
 
     def __init__(self, mesh, donate: bool = True):
         super().__init__(donate=donate)
         self.mesh = mesh
 
+    def _spec_fits(self, shape, spec) -> bool:
+        """A PartitionSpec is usable on `shape` iff every named axis exists
+        in the mesh and its total size divides the dimension it shards."""
+        for dim, part in zip(shape, spec):
+            if part is None:
+                continue
+            parts = part if isinstance(part, tuple) else (part,)
+            size = 1
+            for p in parts:
+                if p not in self.mesh.shape:
+                    return False
+                size *= self.mesh.shape[p]
+            if size == 0 or dim % size:
+                return False
+        return True
+
+    def _hint_leaf(self, x, spec, place):
+        if spec is None or not hasattr(x, "shape") \
+                or not self._spec_fits(x.shape, spec):
+            return x
+        sharding = NamedSharding(self.mesh, spec)
+        if place:
+            return jax.device_put(x, sharding)
+        return jax.lax.with_sharding_constraint(x, sharding)
+
+    def _make_step(self, topology: Topology):
+        base = super()._make_step(topology)
+        hints = {name: hint for name, proc in topology.processors.items()
+                 if (hint := proc.state_sharding()) is not None}
+        if not hints:
+            return base
+
+        def step(states, feedback, source_payload):
+            states, fb, outputs = base(states, feedback, source_payload)
+            states = dict(states)
+            for name, hint in hints.items():
+                states[name] = jax.tree.map(
+                    lambda x, s: self._hint_leaf(x, s, place=False),
+                    states[name], hint,
+                    is_leaf=lambda v: v is None or isinstance(v, P))
+            return states, fb, outputs
+
+        return step
+
     def _mesh_ctx(self):
-        use_mesh = getattr(jax.sharding, "use_mesh", None)
-        if use_mesh is not None:
-            return use_mesh(self.mesh)
-        return self.mesh      # older jax: Mesh is itself a context manager
+        # mesh_context also publishes the mesh through active_mesh(), which
+        # learner code consults at trace time (e.g. CluStream's macro phase
+        # replicates its k-means inputs only when tracing under a mesh)
+        return mesh_context(self.mesh)
 
     def init(self, topology: Topology, key):
         topology = self._as_topology(topology)
@@ -317,18 +370,13 @@ class ShardMapEngine(JitEngine):
             g = self._grouping_of(topology, name)
             if hint is not None:
                 out[name] = jax.tree.map(
-                    lambda x, s: jax.device_put(
-                        x, NamedSharding(self.mesh, s)) if s is not None else x,
+                    lambda x, s: self._hint_leaf(x, s, place=True),
                     st, hint,
                     is_leaf=lambda v: v is None or isinstance(v, P))
             elif g is Grouping.KEY:
-                def shard_leaf(x):
-                    if (hasattr(x, "ndim") and x.ndim >= 1
-                            and x.shape[0] % self.mesh.shape["model"] == 0):
-                        spec = P("model", *([None] * (x.ndim - 1)))
-                        return jax.device_put(x, NamedSharding(self.mesh, spec))
-                    return x
-                out[name] = jax.tree.map(shard_leaf, st)
+                out[name] = jax.tree.map(
+                    lambda x: self._hint_leaf(
+                        x, leading_axis_spec("model", x), place=True), st)
             else:
                 out[name] = st
         return out

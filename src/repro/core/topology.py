@@ -55,8 +55,16 @@ class Processor:
     def process(self, state, inputs):  # pragma: no cover - interface
         raise NotImplementedError
 
-    # Sharding hints for the ShardMapEngine: {state_leaf_path: axis}
     def state_sharding(self):
+        """Sharding hints for the ShardMapEngine: a pytree matching
+        ``init_state``'s structure whose leaves are
+        ``jax.sharding.PartitionSpec`` (shard that leaf) or ``None``
+        (replicate).  The engine validates every spec against its mesh --
+        a hint that names an unknown axis or does not divide the leaf's
+        dimension falls back to replication -- places the state per-shard
+        at init, and re-constrains the hinted leaves on every scanned
+        step so the carry stays partitioned.  ``None`` (the default)
+        means no hints at all: grouping-derived sharding applies."""
         return None
 
 

@@ -84,10 +84,15 @@ _ACTIVE_MESH: contextvars.ContextVar = contextvars.ContextVar(
 
 @contextlib.contextmanager
 def mesh_context(mesh: Mesh):
-    """Activate `mesh` for constrain() AND as jax's resource env."""
+    """Activate `mesh` for constrain()/active_mesh() AND as jax's resource
+    env -- through jax.sharding.use_mesh where it exists (newer jax), the
+    legacy Mesh context manager otherwise.  The contextvar is what model
+    code must consult (active_mesh()), since the jax-internal resource env
+    moved between versions."""
     token = _ACTIVE_MESH.set(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
     try:
-        with mesh:
+        with use_mesh(mesh) if use_mesh is not None else mesh:
             yield mesh
     finally:
         _ACTIVE_MESH.reset(token)
@@ -95,6 +100,16 @@ def mesh_context(mesh: Mesh):
 
 def active_mesh() -> Mesh | None:
     return _ACTIVE_MESH.get()
+
+
+def leading_axis_spec(axis: str, leaf) -> P | None:
+    """P(axis, None, ..., None) matching the leaf's rank -- the learner
+    ``state_sharding`` idiom (shard the leading state axis, replicate the
+    rest).  Rank-0 leaves replicate (None)."""
+    ndim = getattr(leaf, "ndim", 0)
+    if ndim < 1:
+        return None
+    return P(axis, *([None] * (ndim - 1)))
 
 
 def _axis_size(mesh: Mesh, axes) -> int:

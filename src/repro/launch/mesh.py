@@ -29,3 +29,60 @@ def make_local_mesh(model_parallel: int = 1):
     n = jax.device_count()
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def make_stream_mesh(axis: str = "model"):
+    """All visible devices on ONE learner-sharding axis.
+
+    The streaming learners shard state over a single named axis ('model'
+    for key-grouped state: AMRules rules, CluStream micro-clusters; 'data'
+    for the ensemble member axis), so the natural mesh for a sharded
+    stream run puts every device on that axis and leaves the other at 1.
+    """
+    if axis not in ("model", "data"):
+        raise ValueError(f"unknown stream axis {axis!r}")
+    n = jax.device_count()
+    shape = (n, 1) if axis == "model" else (1, n)
+    return jax.make_mesh(shape, ("model", "data"))
+
+
+FORCE_HOST_DEVICES_FLAG = "--xla_force_host_platform_device_count"
+
+
+def force_host_devices(n: int, env=None) -> bool:
+    """Arrange for the CPU platform to expose `n` virtual devices.
+
+    Mutates XLA_FLAGS in `env` (default os.environ).  MUST run before the
+    first jax initialization in the target process -- the flag is read
+    once; callers that already initialized jax get False back and should
+    respawn (tests/benchmarks run their multi-device halves in a
+    subprocess for exactly this reason).
+    """
+    import os
+    import sys
+
+    import re
+
+    env = os.environ if env is None else env
+    flag = f"{FORCE_HOST_DEVICES_FLAG}={n}"
+    flags = env.get("XLA_FLAGS", "")
+    have = re.search(f"{re.escape(FORCE_HOST_DEVICES_FLAG)}=(\\d+)", flags)
+    if have is None:
+        env["XLA_FLAGS"] = f"{flags} {flag}".strip()
+    elif int(have.group(1)) < n:
+        # a smaller pre-existing count would silently mis-label the run
+        env["XLA_FLAGS"] = flags.replace(have.group(0), flag)
+    if "jax" in sys.modules:
+        try:  # already-initialized backends ignore new XLA_FLAGS
+            from jax._src import xla_bridge
+            if not xla_bridge.backends_are_initialized():
+                return True       # flag landed before first init
+        except Exception:
+            pass  # private probe moved between jax versions: fall through
+        try:
+            # initializes the backends now (with the flag we just set)
+            # when nothing was initialized yet, else reports the real count
+            return jax.device_count() >= n
+        except Exception:
+            return True           # cannot probe; the flag IS in the env
+    return True

@@ -206,14 +206,27 @@ class AMRules:
     def init(self, key=None):
         return init_rules(self.rc)
 
+    # every per-rule array (leading axis = max_rules) -- the key-grouped
+    # state a DSPE would route by rule id
+    RULE_AXIS_KEYS = ("active", "pred_attr", "pred_op", "pred_bin",
+                      "pred_valid", "head_n", "head_sum", "since", "stats",
+                      "ph_m", "ph_min", "ph_err", "pend_rule_valid",
+                      "pend_attr", "pend_op", "pend_bin", "pend_timer")
+
     def state_sharding(self):
-        """ShardMapEngine hint: the rule axis of the statistics tensor is
-        the paper's vertical-parallelism axis (key grouping by rule id).
-        eval_shape enumerates the state keys without allocating it."""
-        from jax.sharding import PartitionSpec as P
-        hint = {k: None for k in jax.eval_shape(lambda: init_rules(self.rc))}
-        hint["stats"] = P("model", None, None, None)
-        return hint
+        """ShardMapEngine hint: the rule axis is the paper's
+        vertical-parallelism axis (key grouping by rule id), so every
+        per-rule tensor -- statistics, predicates, heads, Page-Hinkley --
+        partitions over 'model'.  Coverage then computes only the local
+        rules' columns per shard, first-cover is a cross-shard min, and the
+        head/stats segment sums scatter into the local rows; the default
+        rule and the scalar counters stay replicated.  eval_shape
+        enumerates the state without allocating it."""
+        from repro.distributed.sharding import leading_axis_spec
+        st = jax.eval_shape(lambda: init_rules(self.rc))
+        return {k: leading_axis_spec("model", v)
+                if k in self.RULE_AXIS_KEYS else None
+                for k, v in st.items()}
 
     # ------------------------------------------------------------- step
 

@@ -35,6 +35,20 @@ f32 = jnp.float32
 i32 = jnp.int32
 
 
+def _active_mesh():
+    """The device mesh installed by ShardMapEngine's mesh_context (None
+    when tracing outside any mesh, i.e. the plain jit/scan path).  Falls
+    back to jax's legacy resource env so a bare ``with mesh:`` around a
+    hand-rolled trace is honoured too."""
+    from repro.distributed.sharding import active_mesh
+    m = active_mesh()
+    if m is not None:
+        return m
+    from jax.interpreters import pxla
+    m = pxla.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
 @dataclasses.dataclass(frozen=True)
 class CluStreamConfig:
     n_dims: int
@@ -157,10 +171,24 @@ def update(state, x, cc: CluStreamConfig):
 
 
 def macro_cluster(state, cc: CluStreamConfig, key=None):
-    """Micro-batch phase: weighted k-means over micro-cluster centroids."""
+    """Micro-batch phase: weighted k-means over micro-cluster centroids.
+
+    Under a mesh the CF state is sharded over the cluster axis; the k-means
+    contractions over that axis (assignment mass, weighted centroid sums)
+    would otherwise become partial-sum + psum chains whose float
+    accumulation order differs from the single-device scan.  The [K] inputs
+    are tiny, so we gather them to replicated first -- an exact collective
+    -- and the k-means computes bit-identically to the unsharded path on
+    every shard."""
     impl = _impl(cc)
     cent = _centroids(state)
     w = state["n"]
+    mesh = _active_mesh()
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        cent = jax.lax.with_sharding_constraint(cent, rep)
+        w = jax.lax.with_sharding_constraint(w, rep)
     k = cc.n_macro
     init = cent[jnp.argsort(-w)[:k]]
 
@@ -222,6 +250,18 @@ class CluStream:
         state = init_clustream(self.cc, key)
         state["macro"] = _centroids(state)[: self.cc.n_macro]
         return state
+
+    def state_sharding(self):
+        """ShardMapEngine hint: the CF tensors partition over their
+        micro-cluster axis ('model' -- key grouping by cluster id, the
+        vertical analogue of the paper's distributed CluStream); the macro
+        centroids and the scalar clock stay replicated."""
+        from repro.distributed.sharding import leading_axis_spec
+        st = jax.eval_shape(self.init)
+        hint = {k: None for k in st}
+        for k in ("n", "ls", "ss", "lt", "st"):
+            hint[k] = leading_axis_spec("model", st[k])
+        return hint
 
     def step(self, state, x):
         cc = self.cc

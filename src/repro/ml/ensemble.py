@@ -91,6 +91,21 @@ class OzaEnsemble:
                              self._fresh)
         return {"trees": trees, "det": self._det_init(), "key": key}
 
+    def state_sharding(self):
+        """ShardMapEngine hint: the member axis is the ensemble's
+        horizontal-parallelism axis (SAMOA runs each base learner in its
+        own processor instance), so every per-member leaf -- the vmapped
+        trees AND the per-member detector states -- partitions over 'data';
+        the shared PRNG key stays replicated.  eval_shape enumerates the
+        state without allocating it."""
+        from repro.distributed.sharding import leading_axis_spec
+        st = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        member = partial(leading_axis_spec, "data")
+        return {"trees": jax.tree.map(member, st["trees"]),
+                "det": None if st["det"] is None
+                else jax.tree.map(member, st["det"]),
+                "key": None}
+
     def step(self, state, xbin, y):
         ec, tc = self.ec, self.tc
         M = ec.n_members

@@ -19,8 +19,13 @@ from repro.runtime.supervisor import (
 
 @pytest.fixture(scope="module")
 def mesh():
-    # 1x1 mesh on the single CPU device: rules still resolve
-    return jax.make_mesh((1, 1), ("data", "model"))
+    # all available devices, not a hard-coded (1, 1): 'data' is sized to
+    # divide the 4-row test arrays (1x1 on the plain CPU session, 4x2
+    # under the 8-device multidevice CI job -- real partitioning there)
+    import math
+    n = jax.device_count()
+    data = math.gcd(4, n)
+    return jax.make_mesh((data, n // data), ("data", "model"))
 
 
 # ---------------------------- param_spec rules -------------------------------

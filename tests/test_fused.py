@@ -436,18 +436,28 @@ def test_local_engine_runs_bare_learner(reg_stream):
 def test_shard_map_engine_shards_bare_learner_state(reg_stream):
     """ShardMapEngine.init must wrap a bare learner BEFORE sharding its
     state (regression: it used to hand the learner itself to
-    _shard_states) and honour the learner's state_sharding hint."""
+    _shard_states) and honour the learner's state_sharding hint.  The mesh
+    puts every available device on 'model' (not a hard-coded (1, 1)), so
+    under a forced multi-device session this exercises real partitioning;
+    tests/test_multidevice.py forces exactly that."""
     from jax.sharding import PartitionSpec as P
     from repro.core.engines import ShardMapEngine
     xs, ys = reg_stream
-    mesh = jax.make_mesh((1, 1), ("model", "data"))
+    n = jax.device_count()
+    model = n if RC.max_rules % n == 0 else 1
+    mesh = jax.make_mesh((model, n // model), ("model", "data"))
     vamr = VAMR(RC)
     eng = ShardMapEngine(mesh)
     carry = eng.init(vamr, jax.random.PRNGKey(0))
-    spec = carry["states"]["vamr"]["stats"].sharding.spec
-    assert spec == P("model", None, None, None)
+    stats = carry["states"]["vamr"]["stats"]
+    assert stats.sharding.spec == P("model", None, None, None)
+    assert {s.data.shape[0] for s in stats.addressable_shards} \
+        == {RC.max_rules // model}
     carry, outs = eng.run_stream(vamr, carry, {"x": xs[:4], "y": ys[:4]})
     assert outs["metrics"]["seen"].shape == (4,)
+    stats = carry["states"]["vamr"]["stats"]
+    assert {s.data.shape[0] for s in stats.addressable_shards} \
+        == {RC.max_rules // model}
 
 
 def test_jit_engine_scans_clustream_without_labels(blob_stream):

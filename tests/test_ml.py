@@ -141,6 +141,113 @@ def test_detector_stationary_quiet():
     assert not fired
 
 
+def _detector_fns():
+    ac = detectors.AdwinConfig()
+    return [
+        ("ph", detectors.ph_init(), detectors.ph_update),
+        ("ddm", detectors.ddm_init(), detectors.ddm_update),
+        ("eddm", detectors.eddm_init(), detectors.eddm_update),
+        ("adwin", detectors.adwin_init(ac),
+         lambda s, x: detectors.adwin_update(s, x, ac)),
+    ]
+
+
+@pytest.mark.parametrize("value", [0.0, 1.0, 0.5])
+def test_detectors_quiet_on_constant_stream(value):
+    """A constant input stream -- all-correct, all-wrong, or a constant
+    fractional statistic -- is stationary by definition: no detector may
+    ever fire on it."""
+    for name, st, fn in _detector_fns():
+        if name in ("ddm", "eddm") and value == 0.5:
+            continue                    # 0/1 misclassification detectors
+        fn = jax.jit(fn)
+        for _ in range(400):
+            st, drift = fn(st, jnp.float32(value))
+            assert not bool(drift), f"{name} fired on constant {value}"
+
+
+def test_detectors_single_element_window():
+    """The very first update (window of one element) can never signal
+    drift, and every state field stays finite."""
+    for name, st, fn in _detector_fns():
+        st, drift = jax.jit(fn)(st, jnp.float32(1.0))
+        assert not bool(drift), f"{name} fired on a single element"
+        for k, v in st.items():
+            assert bool(jnp.isfinite(v).all()), f"{name}.{k} not finite"
+
+
+def _run_until_drift(st, fn, xs, min_step=50):
+    fn = jax.jit(fn)
+    for i, x in enumerate(xs):
+        st, drift = fn(st, jnp.float32(x))
+        if bool(drift) and i > min_step:
+            return st, i
+    return st, None
+
+
+@pytest.mark.parametrize("name", ["ddm", "eddm"])
+def test_ddm_eddm_reset_to_init_after_drift(name):
+    """DDM/EDDM restart from scratch when drift fires: the state returned
+    on the drift step is exactly the init state, so the next window is
+    judged on fresh statistics."""
+    xs = _drift_stream()
+    _, st0, fn = next(d for d in _detector_fns() if d[0] == name)
+    init = {"ddm": detectors.ddm_init, "eddm": detectors.eddm_init}[name]()
+    st, fired_at = _run_until_drift(st0, fn, xs)
+    assert fired_at is not None, f"{name} never fired"
+    for k, v in st.items():
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(init[k]),
+                                      err_msg=f"{name}.{k} not reset")
+
+
+def test_adwin_drops_old_window_after_drift():
+    """ADWIN's drift response evicts the OLD half of the exponential
+    histogram (the pre-change distribution) and keeps detecting.  Small
+    bucket count so the stream actually reaches the old rows -- at the
+    default 32 rows a 600-sample stream never fills the upper half and
+    the eviction would be vacuously true."""
+    ac = detectors.AdwinConfig(n_buckets=8)
+    fn = lambda s, x: detectors.adwin_update(s, x, ac)
+    jfn = jax.jit(fn)
+    nb = ac.n_buckets
+    st, fired_at, prev = detectors.adwin_init(ac), None, None
+    for i, x in enumerate(_drift_stream()):
+        prev = st
+        st, drift = jfn(st, jnp.float32(x))
+        if bool(drift) and i > 50:
+            fired_at = i
+            break
+    assert fired_at is not None and fired_at > 250
+    # the step before the drift held real mass in the old rows ...
+    assert float(np.asarray(prev["cnt"])[nb // 2:].sum()) > 0
+    # ... and the drift step evicted exactly that half
+    cnt = np.asarray(st["cnt"])
+    assert (cnt[nb // 2:] == 0).all()
+    assert cnt[: nb // 2].sum() > 0           # recent window retained
+    assert float(st["n"]) == fired_at + 1     # lifetime count keeps going
+    # post-reset: quiet on a continuation of the post-change distribution
+    post = np.random.RandomState(7).binomial(1, 0.45, 200).astype(np.float32)
+    _, again = _run_until_drift(st, fn, post, min_step=0)
+    assert again is None
+
+
+def test_ph_requires_reinit_after_drift():
+    """Page-Hinkley keeps its cumulative statistic after firing (no
+    self-reset): it re-fires on the next step, and re-initializing is what
+    arms it for a fresh window -- the contract the ensemble's member-reset
+    path relies on."""
+    fn = lambda s, x: detectors.ph_update(s, x, lam=20.0)
+    xs = _drift_stream()
+    st, fired_at = _run_until_drift(detectors.ph_init(), fn, xs)
+    assert fired_at is not None
+    _, drift = fn(st, jnp.float32(1.0))       # still over threshold
+    assert bool(drift)
+    # fresh state on the post-drift distribution: quiet again
+    post = xs[fired_at:fired_at + 100]
+    _, again = _run_until_drift(detectors.ph_init(), fn, post)
+    assert again is None
+
+
 # ------------------------------ ensembles -----------------------------------
 
 def test_ozabag_learns_and_detects():

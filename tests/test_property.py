@@ -10,7 +10,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.analysis.hlo_cost import analyze_hlo
 from repro.distributed.sharding import param_spec
+from repro.kernels.rule_stats.ops import (rule_moments,
+                                          rule_stats_update_segment)
+from repro.kernels.rule_stats.ref import rule_stats_ref
 from repro.kernels.split_gain.ref import split_gain_ref
+from repro.kernels.vht_stats.ops import stats_update_segment
 from repro.kernels.vht_stats.ref import stats_update_ref
 from repro.ml.htree import TreeConfig, init_tree, route, update_stats
 from repro.optim.adamw import dequantize, quantize
@@ -93,6 +97,57 @@ def test_quantize_roundtrip_error_bound(xs):
     bound = np.abs(xp).max(1) / 127.0 * 1.01 + 1e-6
     err = np.abs(np.pad(np.asarray(back - x), (0, pad))).reshape(-1, BLOCK)
     assert (err.max(1) <= bound).all()
+
+
+# tolerance per accumulation dtype: the segment path accumulates in the
+# stats dtype, the oracle in f32
+_DTYPES = [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-1), (jnp.float16, 3e-2)]
+
+
+@given(st.integers(1, 32), st.integers(1, 8), st.integers(2, 8),
+       st.integers(2, 4), st.integers(1, 64), st.integers(0, 2),
+       st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_vht_stats_segment_matches_onehot_oracle(N, m, nb, C, B, di, seed):
+    """Parity of the class-segmented scatter against the legacy dense
+    one-hot oracle on random shapes/dtypes, with zero + fractional
+    weights in the mix."""
+    dtype, atol = _DTYPES[di]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    stats = (jax.random.uniform(ks[0], (N, m, nb, C)) * 3).astype(dtype)
+    leaf = jax.random.randint(ks[1], (B,), 0, N)
+    xbin = jax.random.randint(ks[2], (B, m), 0, nb)
+    y = jax.random.randint(ks[3], (B,), 0, C)
+    w = jnp.where(jnp.arange(B) % 3 == 0, 0.0, 0.25 + jnp.arange(B) / B)
+    out = stats_update_segment(stats, leaf, xbin, y, w)
+    ref = stats_update_ref(stats.astype(jnp.float32), leaf, xbin, y, w)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=2e-2 if dtype != jnp.float32 else 1e-6,
+                               atol=atol)
+
+
+@given(st.integers(1, 24), st.integers(1, 8), st.integers(2, 8),
+       st.integers(1, 64), st.integers(0, 2), st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_rule_stats_segment_matches_onehot_oracle(R, m, nb, B, di, seed):
+    """Parity of the moment-segmented scatter against the legacy dense
+    one-hot oracle on random shapes/dtypes -- including the R == 1
+    default-rule fast path and segments hitting the discard row R."""
+    dtype, atol = _DTYPES[di]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    stats = (jax.random.uniform(ks[0], (R, m, nb, 3)) * 3).astype(dtype)
+    seg = jax.random.randint(ks[1], (B,), 0, R + 1)        # R = discard
+    xbin = jax.random.randint(ks[2], (B, m), 0, nb)
+    y = jax.random.uniform(ks[3], (B,)) * 2 - 1
+    w = jnp.where(jnp.arange(B) % 3 == 0, 0.0, 0.25 + jnp.arange(B) / B)
+    mom = rule_moments(y, w)
+    out = rule_stats_update_segment(stats, seg, xbin, mom)
+    ref = rule_stats_ref(stats.astype(jnp.float32), seg, xbin, mom)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=2e-2 if dtype != jnp.float32 else 1e-6,
+                               atol=atol)
 
 
 @given(st.integers(0, 1_000_000))
