@@ -55,6 +55,33 @@ def bench_split_gain(fast=True):
          f"hbm_passes_xla={xla_passes};hbm_passes_pallas=2")
 
 
+def bench_tree_route(fast=True):
+    """Batched multi-tree router: the legacy vmapped fori_loop vs the flat
+    gather formulation, both jitted and timed (no interpret mode needed --
+    both run compiled on every backend).  The derived column asserts the
+    routed leaves stayed bit-identical while timing."""
+    import numpy as np
+    from repro.kernels.tree_route.ops import tree_route_gather
+    from repro.kernels.tree_route.ref import tree_route_ref
+    M, N, B, m, nb, D = (16, 255, 512, 200, 8, 24) if not fast \
+        else (8, 255, 128, 50, 8, 24)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    sa = jax.random.randint(ks[0], (M, N), -1, m)
+    sb = jax.random.randint(ks[1], (M, N), 0, nb)
+    ch = jax.random.randint(ks[2], (M, N, 2), 0, N)
+    xb = jax.random.randint(ks[3], (B, m), 0, nb)
+    fori = jax.jit(lambda *a: tree_route_ref(*a, D))
+    gath = jax.jit(lambda *a: tree_route_gather(*a, D))
+    us0 = _time(fori, sa, sb, ch, xb)
+    us1 = _time(gath, sa, sb, ch, xb)
+    same = np.array_equal(np.asarray(fori(sa, sb, ch, xb)),
+                          np.asarray(gath(sa, sb, ch, xb)))
+    assert same, "tree_route gather diverged from the fori oracle"
+    emit("kernel.tree_route.gather", us1,
+         f"fori_us={us0:.0f};speedup={us0/max(us1,1e-9):.1f}x;"
+         f"bit_identical={same}")
+
+
 def bench_flash_attention(fast=True):
     from repro.kernels.flash_attention.ref import attention_ref
     B, S, H, hd = (1, 1024, 8, 128) if not fast else (1, 512, 4, 64)
@@ -72,5 +99,6 @@ def bench_flash_attention(fast=True):
 def main(fast=True):
     bench_vht_stats(fast)
     bench_split_gain(fast)
+    bench_tree_route(fast)
     bench_flash_attention(fast)
     return ROWS

@@ -290,6 +290,9 @@ class ShardMapEngine(JitEngine):
     state per-shard (device_put), and every scanned step re-constrains the
     hinted leaves (with_sharding_constraint), so the carry cannot silently
     collapse to replicated mid-stream however XLA propagates the rest.
+    Hints compose through the LearnerProcessor chain: packed sub-states
+    such as a learner's DetectorBank publish their own leading-axis specs
+    and partition with their owner (members -> 'data', rules -> 'model').
     Hints that do not fit the mesh (unknown axis, or a dimension the axis
     size does not divide) fall back to replication for that leaf instead of
     failing, so one learner config runs on any mesh shape.

@@ -201,6 +201,11 @@ class LearnerProcessor(Processor):
         return self.learner.init(key)
 
     def state_sharding(self):
+        """Delegates to the learner's hints.  Learners compose hints from
+        their sub-systems -- e.g. OzaEnsemble merges its tree hints with
+        the packed DetectorBank's ``state_sharding`` so the per-member
+        detector rows shard with their owning members -- and the
+        ShardMapEngine applies the merged pytree leaf by leaf."""
         fn = getattr(self.learner, "state_sharding", None)
         return fn() if fn is not None else None
 

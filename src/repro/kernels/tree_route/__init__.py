@@ -1,0 +1,6 @@
+from repro.kernels.tree_route.ops import (default_impl, tree_route,
+                                          tree_route_gather)
+from repro.kernels.tree_route.ref import tree_route_ref
+
+__all__ = ["default_impl", "tree_route", "tree_route_gather",
+           "tree_route_ref"]

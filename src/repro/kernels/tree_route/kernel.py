@@ -1,0 +1,80 @@
+"""Pallas kernel: multi-tree routing as shared-prefix one-hot MXU matmuls.
+
+A pointer chase over a node pool is hostile to the TPU (serialized gather
+per depth level, per member).  Reformulated per member: hold the member's
+four node tables -- split_attr, split_bin, left child, right child -- as
+one [N, 4] f32 matrix resident in VMEM, and make every depth step a single
+
+    vals[b, :] = node1h[b, :] @ tables          # [B, N] x [N, 4]
+
+matmul (MXU work; the node one-hot is built in-register with
+broadcasted_iota comparisons, never materialized in HBM).  The attribute
+lookup v[b] = xbin[b, attr[b]] is a masked row reduction on the VPU.  All
+values are small integers, exactly representable in f32, so the routing
+decisions -- and therefore the returned leaf ids -- are bit-identical to
+the integer reference.
+
+Grid = members: every tree in the ensemble routes the SAME micro-batch
+(the shared prefix), so the [B, m] instance block is fetched once per
+member tile while the per-member tables stream through VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+f32 = jnp.float32
+i32 = jnp.int32
+
+
+def _kernel(sa_ref, sb_ref, ch_ref, xbin_ref, leaf_ref, *, max_depth,
+            n_nodes):
+    B, m = xbin_ref.shape
+    # member tables -> one [N, 4] f32 matrix (attr, thr, left, right)
+    tables = jnp.stack(
+        [sa_ref[0].astype(f32), sb_ref[0].astype(f32),
+         ch_ref[0, :, 0].astype(f32), ch_ref[0, :, 1].astype(f32)], axis=1)
+    xb = xbin_ref[...].astype(f32)                       # [B, m]
+    iota_n = jax.lax.broadcasted_iota(i32, (B, n_nodes), 1)
+    iota_m = jax.lax.broadcasted_iota(i32, (B, m), 1)
+
+    node = jnp.zeros((B,), i32)
+    for _ in range(max_depth):
+        node1h = (node[:, None] == iota_n).astype(f32)   # [B, N]
+        vals = jax.lax.dot_general(
+            node1h, tables, (((1,), (0,)), ((), ())),
+            preferred_element_type=f32)                  # [B, 4]
+        attr, thr = vals[:, 0], vals[:, 1]
+        left, right = vals[:, 2], vals[:, 3]
+        is_leaf = attr < 0
+        a = jnp.maximum(attr, 0.0).astype(i32)
+        v = jnp.sum(jnp.where(a[:, None] == iota_m, xb, 0.0), axis=1)
+        nxt = jnp.where(v > thr, right, left).astype(i32)
+        node = jnp.where(is_leaf, node, nxt)
+    leaf_ref[0, :] = node
+
+
+def tree_route_pallas(split_attr, split_bin, children, xbin, max_depth: int,
+                      *, interpret: bool = False):
+    """split_attr/split_bin: [M, N]; children: [M, N, 2]; xbin: [B, m].
+    Returns leaf ids [M, B] i32."""
+    M, N = split_attr.shape
+    B, m = xbin.shape
+    kern = functools.partial(_kernel, max_depth=max_depth, n_nodes=N)
+    return pl.pallas_call(
+        kern,
+        grid=(M,),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda j: (j, 0)),         # split_attr
+            pl.BlockSpec((1, N), lambda j: (j, 0)),         # split_bin
+            pl.BlockSpec((1, N, 2), lambda j: (j, 0, 0)),   # children
+            pl.BlockSpec((B, m), lambda j: (0, 0)),         # shared batch
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, B), i32),
+        interpret=interpret,
+    )(split_attr, split_bin, children, xbin)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the batched multi-tree router.
+
+This is the legacy formulation the ensemble used before the kernelized
+path: one fori_loop over tree depth per member, vmapped across the member
+axis -- each depth step is a batched gather into that member's node
+tables.  Kept as the parity oracle and the "fori" impl.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+i32 = jnp.int32
+
+
+def tree_route_ref(split_attr, split_bin, children, xbin, max_depth: int):
+    """split_attr/split_bin: [M, N] i32; children: [M, N, 2] i32;
+    xbin: [B, m] i32 (one micro-batch shared by all M trees).
+    Returns leaf ids [M, B] i32."""
+    B = xbin.shape[0]
+
+    def one(sa, sb, ch):
+        def step(_, node):
+            attr = sa[node]                              # [B]
+            is_leaf = attr < 0
+            a = jnp.maximum(attr, 0)
+            v = jnp.take_along_axis(xbin, a[:, None], axis=1)[:, 0]
+            go_right = (v > sb[node]).astype(i32)
+            nxt = ch[node, go_right]
+            return jnp.where(is_leaf, node, nxt)
+
+        node = jnp.zeros((B,), i32)
+        return jax.lax.fori_loop(0, max_depth, step, node)
+
+    return jax.vmap(one)(split_attr, split_bin, children)

@@ -25,7 +25,11 @@ Performance (the fused/kernelized path, mirroring the VHT treatment):
   * the SDR cumsum + top-k expansion checks over [R, m, bins] are
     lax.cond-gated on the n_min grace period (RulesConfig.gate_expansions)
     and skip entirely on the (common) steps where no rule is due -- exact,
-    because a non-due rule can never expand.
+    because a non-due rule can never expand;
+  * the per-rule Page-Hinkley detectors are a packed DetectorBank
+    (repro.ml.detectors, ph_ema family): one batched update/reset pass
+    over all R rules, sharded with the rule axis
+    (RulesConfig.detector_impl="inline" keeps the legacy formulation).
 
 Parallelism:
   MAMR -- sequential reference (the MOA baseline).
@@ -72,6 +76,7 @@ class RulesConfig:
     stats_impl: str = "auto"  # auto | pallas | segment | onehot (legacy)
     attr_tile: int = 0        # Pallas stats kernel attribute-tile override
     gate_expansions: bool = True  # lax.cond-gate SDR checks on grace period
+    detector_impl: str = "bank"   # bank (packed DetectorBank) | inline legacy
 
     @property
     def eps_n(self):
@@ -202,6 +207,14 @@ class AMRules:
 
     def __init__(self, rc: RulesConfig):
         self.rc = rc
+        # per-rule Page-Hinkley as a packed DetectorBank (ph_ema family:
+        # deviation against an EMA error baseline); the bank state lives in
+        # the flat ph_m/ph_min/ph_err keys so the rule-axis sharding hints
+        # and the scanned-state layout are unchanged
+        from repro.ml.detectors import DetectorBank, PhEmaConfig
+        self._ph = DetectorBank(
+            "ph_ema", rc.max_rules,
+            PhEmaConfig(alpha=rc.ph_alpha, lam=rc.ph_lambda))
 
     def init(self, key=None):
         return init_rules(self.rc)
@@ -263,16 +276,30 @@ class AMRules:
         state["d_sum"] = state["d_sum"] + (w * y).sum()
         state["d_since"] = state["d_since"] + w.sum()
 
-        # ---- Page-Hinkley drift eviction ---------------------------------
+        # ---- Page-Hinkley drift eviction (packed detector bank) ----------
         rule_err = seg_sum(abs_err)[:R] / jnp.maximum(cnt, 1.0)
         has = cnt > 0
-        mt = jnp.where(has, state["ph_m"] + rule_err - state["ph_err"]
-                       - rc.ph_alpha, state["ph_m"])
-        err_avg = jnp.where(
-            has, 0.99 * state["ph_err"] + 0.01 * rule_err, state["ph_err"])
-        ph_min = jnp.minimum(state["ph_min"], mt)
-        drift = state["active"] & (mt - ph_min > rc.ph_lambda)
-        state["ph_m"], state["ph_min"], state["ph_err"] = mt, ph_min, err_avg
+        if rc.detector_impl == "bank":
+            # one batched ph_ema pass over all R rules; rules without a
+            # covered instance this step hold still (has mask)
+            ph, raw = self._ph.update(self._ph_view(state), rule_err,
+                                      has=has)
+            state["ph_m"], state["ph_min"], state["ph_err"] = \
+                ph["m"], ph["min"], ph["err"]
+            drift = state["active"] & raw
+        elif rc.detector_impl == "inline":
+            # legacy inline formulation -- the bank's parity oracle
+            mt = jnp.where(has, state["ph_m"] + rule_err - state["ph_err"]
+                           - rc.ph_alpha, state["ph_m"])
+            err_avg = jnp.where(
+                has, 0.99 * state["ph_err"] + 0.01 * rule_err,
+                state["ph_err"])
+            ph_min = jnp.minimum(state["ph_min"], mt)
+            drift = state["active"] & (mt - ph_min > rc.ph_lambda)
+            state["ph_m"], state["ph_min"], state["ph_err"] = \
+                mt, ph_min, err_avg
+        else:
+            raise ValueError(f"unknown detector impl {rc.detector_impl!r}")
         state = self._evict(state, drift)
 
         # ---- expansions (lax.cond-gated on the grace period) -------------
@@ -318,6 +345,12 @@ class AMRules:
         state["stats"], state["d_stats"] = ext[:R], ext[R]
         return state
 
+    def _ph_view(self, state):
+        """The per-rule Page-Hinkley state as the DetectorBank's packed
+        layout -- a zero-copy re-labelling of the flat ph_* keys."""
+        return {"m": state["ph_m"], "min": state["ph_min"],
+                "err": state["ph_err"]}
+
     def _evict(self, state, drift):
         state = dict(state)
         state["active"] = state["active"] & ~drift
@@ -329,9 +362,11 @@ class AMRules:
         state["head_sum"] = zero(state["head_sum"])
         state["since"] = zero(state["since"])
         state["stats"] = zero(state["stats"])
-        state["ph_m"] = zero(state["ph_m"])
-        state["ph_min"] = zero(state["ph_min"])
-        state["ph_err"] = zero(state["ph_err"])
+        # drifted rules' detectors restart from scratch: the bank reset is
+        # bit-identical to zeroing exactly the masked rows
+        ph = self._ph.reset(self._ph_view(state), drift)
+        state["ph_m"], state["ph_min"], state["ph_err"] = \
+            ph["m"], ph["min"], ph["err"]
         state["n_removed"] = state["n_removed"] + drift.sum().astype(i32)
         return state
 

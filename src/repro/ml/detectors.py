@@ -1,20 +1,95 @@
 """Streaming change detectors (paper section 5): ADWIN, DDM, EDDM,
 Page-Hinkley -- all as pure functional (state, value) -> (state, drift?).
 
+Every family is configured by a frozen dataclass (`PageHinkleyConfig`,
+`DdmConfig`, `EddmConfig`, `AdwinConfig`, `PhEmaConfig`); the historical
+loose kwargs (``alpha=``, ``lam=``, ``warn_k=``, ``drift_k=``, ``beta=``)
+are still accepted through a deprecation shim so old call sites keep
+working.
+
 ADWIN here is the exponential-bucket variant with a fixed number of bucket
 rows (capacity-bounded, jit-able): adjacent-subwindow mean comparison with
 the Hoeffding-style cut threshold.
+
+DetectorBank
+------------
+Adaptive ensembles attach one detector per member and AMRules one
+Page-Hinkley per rule -- N independent detectors advancing in lockstep.
+``DetectorBank`` keeps those N detectors as ONE packed struct-of-arrays
+state (every leaf gains a leading ``[N]`` axis) and updates all of them in
+a single batched tensor pass: no ``vmap`` of N scalar programs, no
+per-member gather/scatter.  The scalar functions above stay as the exact
+oracles -- the bank's update is bit-identical to ``vmap`` of the scalar
+path (asserted in tests/test_fused.py and tests/test_property.py).
+
+``state_sharding(axis)`` publishes the PartitionSpec hints that let the
+bank shard with its owner (ensemble members -> 'data', AMRules rules ->
+'model') through the generic ``Processor.state_sharding`` machinery of the
+ShardMapEngine.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 f32 = jnp.float32
+
+
+# ------------------------------- configs ------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PageHinkleyConfig:
+    alpha: float = 0.005      # drift magnitude allowance per step
+    lam: float = 50.0         # cumulative-deviation threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class DdmConfig:
+    warn_k: float = 2.0       # warning-zone multiplier (reported, not acted on)
+    drift_k: float = 3.0      # drift-zone multiplier
+
+
+@dataclasses.dataclass(frozen=True)
+class EddmConfig:
+    beta: float = 0.9         # distance-ratio drift threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class AdwinConfig:
+    n_buckets: int = 32       # exponential histogram rows
+    delta: float = 0.002
+
+
+@dataclasses.dataclass(frozen=True)
+class PhEmaConfig:
+    """AMRules' Page-Hinkley variant: the deviation is measured against an
+    exponential moving average of the monitored statistic instead of the
+    running mean, and steps without a sample leave the state untouched."""
+    alpha: float = 0.005
+    lam: float = 35.0
+    decay: float = 0.99       # EMA decay of the error baseline
+
+
+def _resolve(cfg, cls, legacy):
+    """Config resolution with the loose-kwargs deprecation shim: kwargs
+    that are not None build a config (with a DeprecationWarning); mixing
+    kwargs with an explicit config is an error."""
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if given:
+        if cfg is not None:
+            raise TypeError(
+                f"pass either a {cls.__name__} or legacy kwargs, not both")
+        warnings.warn(
+            f"loose detector kwargs {sorted(given)} are deprecated; pass a "
+            f"{cls.__name__} instead", DeprecationWarning, stacklevel=3)
+        return cls(**given)
+    return cfg if cfg is not None else cls()
 
 
 # ------------------------------- Page-Hinkley -------------------------------
@@ -24,12 +99,14 @@ def ph_init():
             "mean": jnp.zeros((), f32), "n": jnp.zeros((), f32)}
 
 
-def ph_update(state, x, *, alpha=0.005, lam=50.0):
+def ph_update(state, x, pc: PageHinkleyConfig | None = None, *,
+              alpha=None, lam=None):
+    pc = _resolve(pc, PageHinkleyConfig, {"alpha": alpha, "lam": lam})
     n = state["n"] + 1
     mean = state["mean"] + (x - state["mean"]) / n
-    m = state["m"] + x - mean - alpha
+    m = state["m"] + x - mean - pc.alpha
     mn = jnp.minimum(state["min"], m)
-    drift = m - mn > lam
+    drift = m - mn > pc.lam
     return {"m": m, "min": mn, "mean": mean, "n": n}, drift
 
 
@@ -41,8 +118,10 @@ def ddm_init():
             "smin": jnp.ones((), f32) * 1e9}
 
 
-def ddm_update(state, error, *, warn_k=2.0, drift_k=3.0):
+def ddm_update(state, error, dc: DdmConfig | None = None, *,
+               warn_k=None, drift_k=None):
     """error: 0/1 misclassification indicator."""
+    dc = _resolve(dc, DdmConfig, {"warn_k": warn_k, "drift_k": drift_k})
     n = state["n"] + 1
     p = state["p"] + (error - state["p"]) / n
     s = jnp.sqrt(p * (1 - p) / jnp.maximum(n, 1.0))
@@ -51,7 +130,7 @@ def ddm_update(state, error, *, warn_k=2.0, drift_k=3.0):
     better = (n >= 30) & (p + s < state["pmin"] + state["smin"])
     pmin = jnp.where(better, p, state["pmin"])
     smin = jnp.where(better, s, state["smin"])
-    drift = (n > 30) & (p + s > pmin + drift_k * smin)
+    drift = (n > 30) & (p + s > pmin + dc.drift_k * smin)
     new = {"n": n, "p": p, "s": s, "pmin": pmin, "smin": smin}
     # reset on drift
     new = jax.tree.map(lambda a, b: jnp.where(drift, a, b), ddm_init(), new)
@@ -66,8 +145,9 @@ def eddm_init():
             "m2smax": jnp.zeros((), f32), "n_err": jnp.zeros((), f32)}
 
 
-def eddm_update(state, error, *, beta=0.9):
+def eddm_update(state, error, ec: EddmConfig | None = None, *, beta=None):
     """Distance-between-errors detector."""
+    ec = _resolve(ec, EddmConfig, {"beta": beta})
     n = state["n"] + 1
     is_err = error > 0.5
     dist = n - state["last_err"]
@@ -81,7 +161,7 @@ def eddm_update(state, error, *, beta=0.9):
     m2s = mean_d + 2 * std
     m2smax = jnp.maximum(state["m2smax"], jnp.where(is_err, m2s, state["m2smax"]))
     ratio = m2s / jnp.maximum(m2smax, 1e-9)
-    drift = is_err & (n_err > 30) & (ratio < beta)
+    drift = is_err & (n_err > 30) & (ratio < ec.beta)
     new = {"n": n, "last_err": jnp.where(is_err, n, state["last_err"]),
            "mean_d": mean_d, "var_d": var_d, "m2smax": m2smax, "n_err": n_err}
     new = jax.tree.map(lambda a, b: jnp.where(drift, a, b), eddm_init(), new)
@@ -90,22 +170,17 @@ def eddm_update(state, error, *, beta=0.9):
 
 # ----------------------------------- ADWIN ----------------------------------
 
-@dataclasses.dataclass(frozen=True)
-class AdwinConfig:
-    n_buckets: int = 32       # exponential histogram rows
-    delta: float = 0.002
-
-
 def adwin_init(ac: AdwinConfig):
     return {"sum": jnp.zeros((ac.n_buckets,), f32),
             "cnt": jnp.zeros((ac.n_buckets,), f32),
             "n": jnp.zeros((), f32)}
 
 
-def adwin_update(state, x, ac: AdwinConfig):
+def adwin_update(state, x, ac: AdwinConfig | None = None):
     """Exponential-histogram ADWIN: bucket 0 is newest.  Compression: when a
     bucket's count reaches 2^i it cascades into bucket i+1 (amortized here
     as a soft cascade each step -- capacity-bounded approximation)."""
+    ac = ac if ac is not None else AdwinConfig()
     nb = ac.n_buckets
     s = state["sum"].at[0].add(x)
     c = state["cnt"].at[0].add(1.0)
@@ -138,3 +213,158 @@ def adwin_update(state, x, ac: AdwinConfig):
     s = jnp.where(drift, jnp.where(half, s, 0.0), s)
     c = jnp.where(drift, jnp.where(half, c, 0.0), c)
     return {"sum": s, "cnt": c, "n": n}, drift
+
+
+# ---------------------------- PH-over-EMA (AMRules) --------------------------
+
+def phema_init():
+    return {"m": jnp.zeros((), f32), "min": jnp.zeros((), f32),
+            "err": jnp.zeros((), f32)}
+
+
+def phema_update(state, x, pe: PhEmaConfig | None = None, has=None):
+    """Page-Hinkley against an EMA error baseline (AMRules per-rule drift).
+
+    `has` masks steps that carried no sample for this detector: the
+    cumulative statistic and the baseline hold still, while the running
+    minimum (a no-op where the statistic held still) and the threshold
+    test are evaluated unconditionally -- exactly the inline formulation
+    AMRules used."""
+    pe = pe if pe is not None else PhEmaConfig()
+    has = jnp.ones_like(x, bool) if has is None else has
+    mt = jnp.where(has, state["m"] + x - state["err"] - pe.alpha, state["m"])
+    err = jnp.where(has, pe.decay * state["err"] + (1.0 - pe.decay) * x,
+                    state["err"])
+    mn = jnp.minimum(state["min"], mt)
+    drift = mt - mn > pe.lam
+    return {"m": mt, "min": mn, "err": err}, drift
+
+
+# ------------------------------- DetectorBank --------------------------------
+
+# the batched updates receive the packed [N, ...] state and an [N] input and
+# must be bit-identical to vmapping the scalar oracle over the leading axis
+FAMILIES = ("ph", "ddm", "eddm", "adwin", "ph_ema")
+
+
+def _adwin_update_batch(state, x, ac: AdwinConfig):
+    """All-rows ADWIN update in one tensor pass: the bucket cascade, the
+    prefix/suffix cut scan, and the drift eviction run on the packed
+    [N, n_buckets] histograms at once -- the same per-row arithmetic as
+    `adwin_update`, so the result is bit-identical to the vmapped scalar
+    path without N gather/scatter programs."""
+    nb = ac.n_buckets
+    s = state["sum"].at[:, 0].add(x)
+    c = state["cnt"].at[:, 0].add(1.0)
+    cap = 2.0 ** jnp.arange(nb)
+    overflow = c >= 2 * cap
+    carry_c = jnp.where(overflow, cap, 0.0)
+    carry_s = jnp.where(overflow,
+                        s * jnp.where(c > 0, cap / jnp.maximum(c, 1e-9), 0.0),
+                        0.0)
+    c = c - carry_c + jnp.roll(carry_c, 1, axis=-1).at[:, 0].set(0.0)
+    s = s - carry_s + jnp.roll(carry_s, 1, axis=-1).at[:, 0].set(0.0)
+    n = state["n"] + 1
+
+    csum = jnp.cumsum(s, -1)
+    ccnt = jnp.cumsum(c, -1)
+    tot_s, tot_c = csum[:, -1:], ccnt[:, -1:]
+    n0 = jnp.maximum(ccnt, 1e-9)
+    n1 = jnp.maximum(tot_c - ccnt, 1e-9)
+    mu0 = csum / n0
+    mu1 = (tot_s - csum) / n1
+    m_inv = 1 / n0 + 1 / n1
+    dd = math.log(2.0 / ac.delta)
+    var = jnp.clip((tot_s / jnp.maximum(tot_c, 1e-9))
+                   * (1 - tot_s / jnp.maximum(tot_c, 1e-9)), 0.0, 0.25)
+    eps = jnp.sqrt(2 * m_inv * var * dd) + 2.0 / 3.0 * m_inv * dd
+    valid = (ccnt > 5) & ((tot_c - ccnt) > 5)
+    drift = jnp.any(valid & (jnp.abs(mu0 - mu1) > eps), axis=-1)
+    half = jnp.arange(nb) < nb // 2
+    s = jnp.where(drift[:, None], jnp.where(half, s, 0.0), s)
+    c = jnp.where(drift[:, None], jnp.where(half, c, 0.0), c)
+    return {"sum": s, "cnt": c, "n": n}, drift
+
+
+class DetectorBank:
+    """N change detectors of one family as a packed struct-of-arrays state.
+
+    Every leaf of the scalar detector state gains a leading ``[N]`` axis;
+    ``update`` advances all N detectors in one batched tensor pass (the
+    PH/DDM/EDDM recurrences are purely elementwise, so the scalar update
+    functions run unchanged on the packed state; ADWIN gets a dedicated
+    batched histogram pass).  ``reset`` re-initializes a masked subset of
+    rows, bit-identical to re-running the scalar ``*_init`` for exactly
+    those detectors.  ``state_sharding`` publishes the hint that lets the
+    bank partition over its owner's mesh axis.
+    """
+
+    def __init__(self, family: str, n: int, config=None):
+        if family not in FAMILIES:
+            raise ValueError(f"unknown detector family {family!r} "
+                             f"(available: {', '.join(FAMILIES)})")
+        self.family = family
+        self.n = n
+        defaults = {"ph": PageHinkleyConfig, "ddm": DdmConfig,
+                    "eddm": EddmConfig, "adwin": AdwinConfig,
+                    "ph_ema": PhEmaConfig}
+        self.config = config if config is not None else defaults[family]()
+
+    # -------------------------------------------------------------- state
+
+    def _init_one(self):
+        if self.family == "ph":
+            return ph_init()
+        if self.family == "ddm":
+            return ddm_init()
+        if self.family == "eddm":
+            return eddm_init()
+        if self.family == "adwin":
+            return adwin_init(self.config)
+        return phema_init()
+
+    def init(self):
+        """Packed [N, ...] state: the scalar init broadcast across rows."""
+        one = self._init_one()
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.n, *x.shape)), one)
+
+    # ------------------------------------------------------------- update
+
+    def update(self, state, x, has=None):
+        """One batched pass over all N detectors.  x: [N] monitored values
+        (one per detector).  `has` ([N] bool) is honoured by the ph_ema
+        family only (AMRules rules with no covered instance this step);
+        the classic families consume one sample per detector per step.
+        Returns (state, drift[N] bool)."""
+        if self.family == "ph":
+            return ph_update(state, x, self.config)
+        if self.family == "ddm":
+            return ddm_update(state, x, self.config)
+        if self.family == "eddm":
+            return eddm_update(state, x, self.config)
+        if self.family == "adwin":
+            return _adwin_update_batch(state, x, self.config)
+        return phema_update(state, x, self.config, has=has)
+
+    # -------------------------------------------------------------- reset
+
+    def reset(self, state, mask):
+        """Re-initialize the detectors where ``mask`` ([N] bool) holds --
+        the post-drift bank reset.  Bit-identical to replacing exactly the
+        masked rows with the scalar ``*_init`` state."""
+        fresh = self.init()
+        def pick(a, b):
+            m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+            return jnp.where(m, a, b)
+        return jax.tree.map(pick, fresh, state)
+
+    # ----------------------------------------------------------- sharding
+
+    def state_sharding(self, axis: str = "data"):
+        """ShardMapEngine hints: every packed leaf shards its leading
+        detector axis over ``axis`` so the bank partitions with its owner
+        (ensemble members -> 'data', rules -> 'model')."""
+        from repro.distributed.sharding import leading_axis_spec
+        st = jax.eval_shape(self.init)
+        return jax.tree.map(partial(leading_axis_spec, axis), st)

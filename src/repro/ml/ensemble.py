@@ -10,14 +10,32 @@ Base learner: the tensorized Hoeffding tree (vmap'd across members) --
 these are the meta-algorithms SAMOA pairs with external single-machine
 classifiers; here the base is our own tree, pluggable via init/step fns.
 
-Performance (the fused/kernelized path): per-member statistics updates
-already dispatch through repro.kernels.vht_stats inside the vmap (the
-tree's stats_impl knob).  The split machinery is hoisted OUT of the vmap
-and lax.cond-gated on ANY member having a due leaf
-(EnsembleConfig.gate_members) -- gating inside the vmap would be useless,
-since vmap turns lax.cond into a select that executes both branches.  The
-fresh-tree reset constant is built once at construction instead of inside
-the (scanned) step.
+Performance (the fused/kernelized path):
+
+  * routing -- the whole micro-batch is sorted through ALL member trees by
+    ONE batched multi-tree router call (repro.kernels.tree_route: Pallas
+    one-hot matmuls on TPU, flat 1-D gathers elsewhere;
+    EnsembleConfig.route_impl), and the resulting [M, B] leaf tensor
+    serves BOTH the vote and the training scatter -- the per-member
+    fori_loop-in-vmap it replaces serialized a batched gather per depth
+    level and routed every instance twice;
+  * detectors -- the per-member change detectors live in a packed
+    DetectorBank (repro.ml.detectors): one struct-of-arrays state updated
+    in a single tensor pass instead of a vmap of M scalar detector
+    programs (EnsembleConfig.detector_impl="vmap" keeps the oracle);
+  * statistics -- per-member updates dispatch through
+    repro.kernels.vht_stats inside the vmap (the tree's stats_impl knob);
+  * split checks -- gated across members (EnsembleConfig.gate_members):
+    the M member node pools flatten to ONE [M*N] pool and the gain
+    reduction runs over a gathered <= check_tile row tile of due leaves
+    (child distributions from the gathered rows' cumsum), with the
+    rewiring itself lax.cond-gated on a split actually landing; a
+    lax.cond inside the member vmap would lower to a both-branches
+    select, which is why the pre-bank path paid a full per-member
+    [N, m, bins, C] reduction whenever any member came due.  The full
+    vmapped pass survives as the ungated oracle and the tile-overflow
+    fallback.  The fresh-tree reset constant is built once at
+    construction instead of inside the (scanned) step.
 """
 
 from __future__ import annotations
@@ -29,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.ml import detectors, htree
+from repro.ml.detectors import DetectorBank
 from repro.ml.htree import TreeConfig
 from repro.ml.vht import VHT, VHTConfig
 
@@ -43,6 +62,13 @@ class EnsembleConfig:
     boost: bool = False
     detector: str = "adwin"      # adwin | ddm | eddm | ph | none
     gate_members: bool = True    # lax.cond-gate split work on any member due
+    split_check: str = "pool"    # pool (flattened [M*N] gather tile) |
+                                 # member (per-member full pass behind the
+                                 # any-due gate; shard-friendly: never
+                                 # reshapes across the partitioned axis)
+    route_impl: str | None = None  # member router override: pallas | gather
+                                   # | fori | auto; None -> tree.route_impl
+    detector_impl: str = "bank"  # bank (packed tensor pass) | vmap (legacy)
 
 
 class OzaEnsemble:
@@ -51,6 +77,11 @@ class OzaEnsemble:
         self.tc = ec.tree
         self._vht = VHT(VHTConfig(self.tc))
         self._ac = detectors.AdwinConfig()
+        # only the four documented member-detector families ("none" and
+        # anything else mean no detector; ph_ema is AMRules-internal)
+        self._bank = (DetectorBank(ec.detector, ec.n_members)
+                      if ec.detector in ("adwin", "ddm", "eddm", "ph")
+                      else None)
         # the drift-reset target is a constant of the config: build it once
         # instead of re-materializing it inside every (scanned) step
         self._fresh = htree.init_tree(self.tc)
@@ -60,31 +91,31 @@ class OzaEnsemble:
         self._tc_inner = dataclasses.replace(self.tc, gate_splits=False)
 
     def _det_init(self):
-        d = self.ec.detector
-        if d == "adwin":
-            one = detectors.adwin_init(self._ac)
-        elif d == "ddm":
-            one = detectors.ddm_init()
-        elif d == "eddm":
-            one = detectors.eddm_init()
-        elif d == "ph":
-            one = detectors.ph_init()
-        else:
+        if self._bank is None:
             return None
-        return jax.tree.map(lambda x: jnp.stack([x] * self.ec.n_members), one)
+        # the packed bank state == the stacked scalar states, leaf for leaf
+        return self._bank.init()
 
     def _det_update(self, dst, err_rate):
+        if self._bank is None:
+            return dst, jnp.zeros((self.ec.n_members,), bool)
+        if self.ec.detector_impl == "bank":
+            return self._bank.update(dst, err_rate)
+        if self.ec.detector_impl != "vmap":
+            raise ValueError(
+                f"unknown detector impl {self.ec.detector_impl!r}")
+        # legacy oracle: one scalar detector program per member, vmapped
         d = self.ec.detector
         if d == "adwin":
             fn = partial(detectors.adwin_update, ac=self._ac)
             return jax.vmap(lambda s, x: fn(s, x))(dst, err_rate)
         if d == "ddm":
-            return jax.vmap(detectors.ddm_update)(dst, err_rate)
+            return jax.vmap(lambda s, x: detectors.ddm_update(s, x))(
+                dst, err_rate)
         if d == "eddm":
-            return jax.vmap(detectors.eddm_update)(dst, err_rate)
-        if d == "ph":
-            return jax.vmap(detectors.ph_update)(dst, err_rate)
-        return dst, jnp.zeros((self.ec.n_members,), bool)
+            return jax.vmap(lambda s, x: detectors.eddm_update(s, x))(
+                dst, err_rate)
+        return jax.vmap(lambda s, x: detectors.ph_update(s, x))(dst, err_rate)
 
     def init(self, key):
         trees = jax.tree.map(lambda x: jnp.stack([x] * self.ec.n_members),
@@ -95,15 +126,17 @@ class OzaEnsemble:
         """ShardMapEngine hint: the member axis is the ensemble's
         horizontal-parallelism axis (SAMOA runs each base learner in its
         own processor instance), so every per-member leaf -- the vmapped
-        trees AND the per-member detector states -- partitions over 'data';
-        the shared PRNG key stays replicated.  eval_shape enumerates the
-        state without allocating it."""
+        trees AND the packed detector bank -- partitions over 'data'; the
+        shared PRNG key stays replicated.  The bank publishes its own
+        leading-axis hints (DetectorBank.state_sharding), which the
+        LearnerProcessor/ShardMapEngine chain picks up unchanged.
+        eval_shape enumerates the tree state without allocating it."""
         from repro.distributed.sharding import leading_axis_spec
         st = jax.eval_shape(self.init, jax.random.PRNGKey(0))
         member = partial(leading_axis_spec, "data")
         return {"trees": jax.tree.map(member, st["trees"]),
-                "det": None if st["det"] is None
-                else jax.tree.map(member, st["det"]),
+                "det": None if self._bank is None
+                else self._bank.state_sharding("data"),
                 "key": None}
 
     def step(self, state, xbin, y):
@@ -111,11 +144,15 @@ class OzaEnsemble:
         M = ec.n_members
         key, k1 = jax.random.split(state["key"])
 
+        # --- route once through all members (batched multi-tree router) ---
+        # the [M, B] leaf ids serve both the vote and the training scatter
+        leaf = htree.route_members(state["trees"], xbin, tc,
+                                   impl=ec.route_impl)
+
         # --- predict: weighted vote --------------------------------------
-        def pred_one(tree):
-            yh, _ = htree.predict(tree, xbin, tc)
-            return yh
-        votes = jax.vmap(pred_one)(state["trees"])          # [M, B]
+        counts = jnp.take_along_axis(state["trees"]["class_counts"],
+                                     leaf[:, :, None], axis=1)  # [M, B, C]
+        votes = jnp.argmax(counts, axis=-1)                 # [M, B]
         vote_oh = jax.nn.one_hot(votes, tc.n_classes).sum(0)
         pred = jnp.argmax(vote_oh, -1)
         correct = jnp.sum((pred == y).astype(f32))
@@ -132,15 +169,27 @@ class OzaEnsemble:
         w = jax.random.poisson(k1, lam, (M, xbin.shape[0])).astype(f32)
 
         # --- train members: statistics (vmap, kernelized scatter) ---------
-        def train_one(tree, wts):
-            leaf = htree.route(tree, xbin, tc)
-            return htree.update_stats(tree, leaf, xbin, y, wts, tc)
-        trees = jax.vmap(train_one)(state["trees"], w)
+        def train_one(tree, lf, wts):
+            return htree.update_stats(tree, lf, xbin, y, wts, tc)
+        trees = jax.vmap(train_one)(state["trees"], leaf, w)
 
         # --- split checks, gated across members ---------------------------
         # exact: a member with no due leaf produces all-False should-split,
-        # so skipping the whole vmapped decide/apply is an identity
+        # so skipping the whole decide/apply is an identity.  The gated
+        # branch treats the M member node pools as ONE flattened [M*N]
+        # pool and gain-reduces only a gathered <= check_tile row tile of
+        # due leaves (the cross-member generalization of the single-tree
+        # gather tile -- a lax.cond INSIDE the member vmap would lower to
+        # a both-branches select, so per-member gating cannot work); child
+        # class distributions come from the gathered rows' cumsum, so the
+        # full [M, N, m, bins, C] reductions never run on the common path.
+        # The full per-member vmap pass stays as the ungated oracle and
+        # the overflow fallback.
         tci = self._tc_inner
+        N = tc.max_nodes
+        MN = M * N
+        K = min(tc.check_tile, MN)
+        C = tc.n_classes
 
         def split_all(ts):
             def split_one(tree):
@@ -154,12 +203,52 @@ class OzaEnsemble:
                 return tree
             return jax.vmap(split_one)(ts)
 
-        if ec.gate_members:
-            any_due = jnp.any((trees["split_attr"] < 0)
-                              & (trees["since_attempt"] >= tc.n_min))
-            trees = jax.lax.cond(any_due, split_all, lambda ts: ts, trees)
-        else:
+        def split_gathered(ts):
+            due = (ts["split_attr"] < 0) & (ts["since_attempt"] >= tc.n_min)
+            flat = {k: ts[k].reshape((MN,) + ts[k].shape[2:])
+                    for k in htree._DECIDE_KEYS}
+            idx, s_k, a_k, b_k, left_k, right_k = htree.gather_decide_tile(
+                flat, due.reshape(MN), K, tci, with_children=True)
+            scat = lambda val, z: z.at[idx].set(val)
+            should = scat(s_k, jnp.zeros((MN,), bool)).reshape(M, N)
+            attr = scat(a_k, jnp.zeros((MN,), i32)).reshape(M, N)
+            tbin = scat(b_k, jnp.zeros((MN,), i32)).reshape(M, N)
+            left = scat(left_k, jnp.zeros((MN, C), f32)).reshape(M, N, C)
+            right = scat(right_k, jnp.zeros((MN, C), f32)).reshape(M, N, C)
+            ts = dict(ts)
+            ts["since_attempt"] = jnp.where(due, 0.0, ts["since_attempt"])
+
+            def apply_members(t):
+                def one(tree, s, a, b, lc, rc):
+                    tree, _ = htree.apply_splits(tree, s, a, b, tci,
+                                                 child_counts=(lc, rc))
+                    return tree
+                return jax.vmap(one)(t, should, attr, tbin, left, right)
+
+            # splits land far more rarely than leaves come due: skip the
+            # whole rewiring (an identity when should is all-False)
+            return jax.lax.cond(jnp.any(should), apply_members,
+                                lambda t: t, ts)
+
+        if not ec.gate_members:
             trees = split_all(trees)
+        else:
+            due_all = (trees["split_attr"] < 0) & \
+                (trees["since_attempt"] >= tc.n_min)
+            if ec.split_check == "pool":
+                trees = htree.gated_check(jnp.sum(due_all.astype(i32)), K,
+                                          split_gathered, split_all,
+                                          lambda ts: ts, trees)
+            elif ec.split_check == "member":
+                # the shard-friendly gate: the [M, N] -> [M*N] flatten of
+                # the pool tile would cross the partitioned member axis,
+                # so sharded runs keep the per-member full pass behind
+                # the cross-member any-due cond
+                trees = jax.lax.cond(jnp.any(due_all), split_all,
+                                     lambda ts: ts, trees)
+            else:
+                raise ValueError(
+                    f"unknown split check {ec.split_check!r}")
 
         # --- change detection: reset drifted members ----------------------
         det = state["det"]

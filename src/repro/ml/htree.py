@@ -44,6 +44,7 @@ class TreeConfig:
     split_delay: int = 0          # D engine-steps between decide & apply
     buffer_size: int = 0          # wk(z); 0 = wok when delay>0, local if D=0
     stats_impl: str = "auto"      # auto | pallas | segment | onehot (legacy)
+    route_impl: str = "auto"      # auto | pallas | gather | fori (legacy)
     attr_tile: int = 0            # Pallas stats kernel attribute-tile override
     gate_splits: bool = True      # lax.cond-gate split checks on grace period
     check_tile: int = 16          # gated check: max due leaves examined via
@@ -86,20 +87,29 @@ def init_tree(tc: TreeConfig):
 # --------------------------------------------------------------------------
 
 def route(state, xbin, tc: TreeConfig):
-    """xbin: [B, m] int32 binned attributes -> leaf ids [B]."""
-    B = xbin.shape[0]
+    """xbin: [B, m] int32 binned attributes -> leaf ids [B].
 
-    def step(_, node):
-        attr = state["split_attr"][node]                 # [B]
-        is_leaf = attr < 0
-        a = jnp.maximum(attr, 0)
-        v = jnp.take_along_axis(xbin, a[:, None], axis=1)[:, 0]
-        go_right = (v > state["split_bin"][node]).astype(i32)
-        nxt = state["children"][node, go_right]
-        return jnp.where(is_leaf, node, nxt)
+    Dispatched through repro.kernels.tree_route (the M == 1 fast path of
+    the batched multi-tree router): Pallas one-hot matmuls on TPU, flat
+    1-D gathers elsewhere, tc.route_impl="fori" keeps the legacy
+    fori_loop oracle.  All impls return bit-identical leaf ids (integer
+    routing)."""
+    from repro.kernels.tree_route.ops import tree_route
+    return tree_route(state["split_attr"], state["split_bin"],
+                      state["children"], xbin, max_depth=tc.max_depth,
+                      impl=tc.route_impl)
 
-    node = jnp.zeros((B,), i32)
-    return jax.lax.fori_loop(0, tc.max_depth, step, node)
+
+def route_members(trees, xbin, tc: TreeConfig, impl: str | None = None):
+    """Route ONE shared micro-batch through M stacked member trees in a
+    single batched router call -> leaf ids [M, B].  `trees` is the
+    leading-axis-stacked tree state of an ensemble; the per-member
+    fori_loop-in-vmap this replaces serialized a batched gather per depth
+    level."""
+    from repro.kernels.tree_route.ops import tree_route
+    return tree_route(trees["split_attr"], trees["split_bin"],
+                      trees["children"], xbin, max_depth=tc.max_depth,
+                      impl=impl if impl is not None else tc.route_impl)
 
 
 def predict(state, xbin, tc: TreeConfig):
@@ -186,6 +196,34 @@ def due_topk(due, score, k):
     return jax.lax.top_k(jnp.where(due, score, -1.0), k)[1]
 
 
+def child_counts_from_stats(stats, best_attr, best_bin):
+    """Left/right child class distributions for the chosen (attr, bin)
+    thresholds, derived from the statistics cumsum over the bin axis.
+    stats: [R, m, bins, C]; best_attr/best_bin: [R] -> ([R, C], [R, C])."""
+    rows = jnp.arange(stats.shape[0])
+    cum = jnp.cumsum(stats, axis=2)
+    left = cum[rows, jnp.maximum(best_attr, 0), jnp.maximum(best_bin, 0)]
+    right = cum[rows, jnp.maximum(best_attr, 0), -1] - left
+    return left, right
+
+
+def gather_decide_tile(flat_state, due, k, tc: TreeConfig,
+                       with_children=False):
+    """Gather up to k due rows of a (possibly member-flattened) node pool
+    -- top-k on the grace counter -- and run the split decision on just
+    that tile.  Returns (idx, should_k, attr_k, bin_k) plus the gathered
+    rows' child class distributions when ``with_children``.  Filler rows
+    (fewer than k due) fail _decide_splits_impl's attempted test, so
+    their should_k is always False."""
+    idx = due_topk(due, flat_state["since_attempt"], k)
+    sub = {key: flat_state[key][idx] for key in _DECIDE_KEYS}
+    s_k, a_k, b_k = _decide_splits_impl(sub, tc)
+    if not with_children:
+        return idx, s_k, a_k, b_k
+    left_k, right_k = child_counts_from_stats(sub["stats"], a_k, b_k)
+    return idx, s_k, a_k, b_k, left_k, right_k
+
+
 def gated_check(n_due, k, gathered, full, idle, operand):
     """The exact split-check gate shared by decide_splits and the LS
     processor: skip entirely when nothing is due, reduce a gathered row
@@ -220,9 +258,7 @@ def decide_splits(state, tc: TreeConfig):
     due = (state["split_attr"] < 0) & (state["since_attempt"] >= tc.n_min)
 
     def gathered(st):
-        idx = due_topk(due, st["since_attempt"], K)
-        sub = {k: st[k][idx] for k in _DECIDE_KEYS}
-        s_k, a_k, b_k = _decide_splits_impl(sub, tc)
+        idx, s_k, a_k, b_k = gather_decide_tile(st, due, K, tc)
         return (jnp.zeros((N,), bool).at[idx].set(s_k),
                 jnp.zeros((N,), i32).at[idx].set(a_k),
                 jnp.zeros((N,), i32).at[idx].set(b_k))
@@ -278,11 +314,8 @@ def _apply_splits_impl(state, split_mask, best_attr, best_bin, tc: TreeConfig,
     if child_counts is not None:
         left_cnt, right_cnt = child_counts
     else:
-        nodes = jnp.arange(N)
-        cum = jnp.cumsum(state["stats"], axis=2)
-        left_cnt = cum[nodes, jnp.maximum(best_attr, 0),
-                       jnp.maximum(best_bin, 0)]
-        right_cnt = cum[nodes, jnp.maximum(best_attr, 0), -1] - left_cnt
+        left_cnt, right_cnt = child_counts_from_stats(state["stats"],
+                                                      best_attr, best_bin)
 
     # scratch-row scatter: rows not splitting write to a throwaway slot N
     l_idx = jnp.where(do, jnp.clip(lchild, 0, N - 1), N)

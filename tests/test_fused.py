@@ -15,6 +15,8 @@ from repro.data.generators import (ElectricityLikeGenerator,
 from repro.kernels.rule_stats.ops import (rule_moments, rule_stats_update,
                                           rule_stats_update_segment)
 from repro.kernels.rule_stats.ref import rule_stats_ref
+from repro.kernels.tree_route.ops import tree_route
+from repro.kernels.tree_route.ref import tree_route_ref
 from repro.kernels.vht_stats.ops import stats_update, stats_update_segment
 from repro.kernels.vht_stats.ref import stats_update_ref
 from repro.ml import clustream
@@ -316,17 +318,128 @@ def test_ensemble_scanned_bit_identical_to_step_loop(cls_stream):
     _assert_trees_identical(st, st2)
 
 
-def test_ensemble_gated_members_bit_identical_to_ungated(cls_stream):
-    """Gating the per-member split machinery on ANY member being due must
-    not change a single bit of any member tree."""
+@pytest.mark.parametrize("check", ["pool", "member"])
+def test_ensemble_gated_members_bit_identical_to_ungated(cls_stream, check):
+    """Gating the member split machinery -- whether through the flattened
+    [M*N]-pool gather tile or the shard-friendly per-member any-due gate
+    -- must not change a single bit of any member tree."""
     xs, ys = cls_stream
-    ec = EnsembleConfig(tree=ETC, n_members=4)
+    ec = EnsembleConfig(tree=ETC, n_members=4, split_check=check)
     gated = OzaEnsemble(ec)
     plain = OzaEnsemble(dataclasses.replace(ec, gate_members=False))
     s1, _ = jax.jit(gated.run)(gated.init(jax.random.PRNGKey(0)), xs, ys)
     s0, _ = jax.jit(plain.run)(plain.init(jax.random.PRNGKey(0)), xs, ys)
     assert int(s1["trees"]["n_splits"].sum()) > 0   # splits actually fired
     _assert_trees_identical(s1, s0)
+
+
+def test_ensemble_pool_tile_overflow_fallback(cls_stream):
+    """check_tile=1 forces the pooled gather tile to overflow into the
+    full per-member reduction whenever more than one leaf is due across
+    the whole member pool -- still bit-identical."""
+    xs, ys = cls_stream
+    tc1 = dataclasses.replace(ETC, check_tile=1)
+    tiny = OzaEnsemble(EnsembleConfig(tree=tc1, n_members=4))
+    plain = OzaEnsemble(EnsembleConfig(tree=ETC, n_members=4,
+                                       gate_members=False))
+    s1, _ = jax.jit(tiny.run)(tiny.init(jax.random.PRNGKey(0)), xs, ys)
+    s0, _ = jax.jit(plain.run)(plain.init(jax.random.PRNGKey(0)), xs, ys)
+    _assert_trees_identical(s1, s0)
+
+
+# ------------------------- batched multi-tree router -----------------------
+
+def _random_tables(key, M, N, m, nb):
+    ks = jax.random.split(key, 4)
+    sa = jax.random.randint(ks[0], (M, N), -1, m)
+    sb = jax.random.randint(ks[1], (M, N), 0, nb)
+    ch = jax.random.randint(ks[2], (M, N, 2), 0, N)
+    xb = jax.random.randint(ks[3], (64, m), 0, nb)
+    return sa, sb, ch, xb
+
+
+@pytest.mark.parametrize("impl", ["gather", "pallas"])
+@pytest.mark.parametrize("M", [1, 7])
+def test_tree_route_matches_fori_oracle(impl, M):
+    """The batched router (flat gathers and the Pallas one-hot matmul
+    program in interpret mode) returns bit-identical leaf ids to the
+    legacy per-member fori_loop, including the M == 1 fast path."""
+    sa, sb, ch, xb = _random_tables(jax.random.PRNGKey(3), M, 31, 12, 8)
+    ref = tree_route(sa, sb, ch, xb, max_depth=10, impl="fori")
+    out = tree_route(sa, sb, ch, xb, max_depth=10, impl=impl)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_tree_route_single_tree_entry_matches_member_zero():
+    """Rank-1 tables (htree.route's entry) give exactly member 0's row."""
+    sa, sb, ch, xb = _random_tables(jax.random.PRNGKey(5), 3, 31, 12, 8)
+    full = tree_route(sa, sb, ch, xb, max_depth=10, impl="gather")
+    one = tree_route(sa[0], sb[0], ch[0], xb, max_depth=10, impl="gather")
+    assert one.shape == (xb.shape[0],)
+    np.testing.assert_array_equal(np.asarray(one), np.asarray(full[0]))
+
+
+def test_tree_route_on_learned_tree_matches_legacy_route(dense_stream):
+    """On a REAL learned tree (not random tables) the dispatched
+    htree.route equals the legacy fori formulation."""
+    from repro.ml.htree import route
+    xs, ys = dense_stream
+    tc = dataclasses.replace(TC, n_min=50)
+    vht = VHT(VHTConfig(tc))
+    st, _ = jax.jit(vht.run)(vht.init(), xs[:20], ys[:20])
+    tree = {k: st[k] for k in ("split_attr", "split_bin", "children")}
+    got = route(st, xs[0], tc)
+    ref = tree_route_ref(tree["split_attr"][None], tree["split_bin"][None],
+                         tree["children"][None], xs[0], tc.max_depth)[0]
+    assert int(st["n_nodes"]) > 1          # the tree actually grew
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_ensemble_route_impls_bit_identical(cls_stream):
+    """The scanned ensemble stream under the batched gather router equals
+    the legacy fori router bit for bit -- trees, detectors, and key."""
+    xs, ys = cls_stream
+    ec = EnsembleConfig(tree=ETC, n_members=4)
+    fast = OzaEnsemble(ec)                              # auto -> gather here
+    slow = OzaEnsemble(dataclasses.replace(ec, route_impl="fori"))
+    s1, _ = jax.jit(fast.run)(fast.init(jax.random.PRNGKey(0)), xs, ys)
+    s0, _ = jax.jit(slow.run)(slow.init(jax.random.PRNGKey(0)), xs, ys)
+    assert int(s1["trees"]["n_splits"].sum()) > 0
+    _assert_trees_identical(s1, s0)
+
+
+# ------------------------- packed detector bank ----------------------------
+
+@pytest.mark.parametrize("det", ["adwin", "ddm", "eddm", "ph"])
+def test_ensemble_detector_bank_bit_identical_to_vmap(cls_stream, det):
+    """The packed DetectorBank pass equals the legacy vmap-of-scalars
+    detector path over a whole scanned stream, for every family."""
+    xs, ys = cls_stream
+    ec = EnsembleConfig(tree=ETC, n_members=4, detector=det)
+    bank = OzaEnsemble(ec)
+    vmapped = OzaEnsemble(dataclasses.replace(ec, detector_impl="vmap"))
+    s1, m1 = jax.jit(bank.run)(bank.init(jax.random.PRNGKey(0)), xs, ys)
+    s0, m0 = jax.jit(vmapped.run)(vmapped.init(jax.random.PRNGKey(0)),
+                                  xs, ys)
+    _assert_trees_identical(s1, s0)
+    _assert_trees_identical(m1, m0)
+
+
+@pytest.mark.parametrize("name,mk", _amrules_variants())
+def test_amrules_detector_bank_bit_identical_to_inline(reg_stream, name, mk):
+    """The per-rule Page-Hinkley rewired through the ph_ema DetectorBank
+    equals the legacy inline formulation bit for bit, on a config whose
+    tight threshold makes evictions actually fire."""
+    xs, ys = reg_stream
+    rc = dataclasses.replace(RC, ph_lambda=0.15)
+    bank = mk(rc)
+    inline = mk(dataclasses.replace(rc, detector_impl="inline"))
+    s1, m1 = jax.jit(bank.run)(bank.init(), xs, ys)
+    s0, m0 = jax.jit(inline.run)(inline.init(), xs, ys)
+    if name == "MAMR":                    # HAMR/VAMR never evict in-step
+        assert int(s1["n_removed"]) > 0   # drift eviction actually fired
+    _assert_trees_identical(s1, s0)
+    _assert_trees_identical(m1, m0)
 
 
 # ------------------------- clustream ---------------------------------------

@@ -248,6 +248,90 @@ def test_ph_requires_reinit_after_drift():
     assert again is None
 
 
+# ------------------------------ detector bank -------------------------------
+
+def _bank_families():
+    return ["ph", "ddm", "eddm", "adwin", "ph_ema"]
+
+
+def _bank_stream(n, steps, binary):
+    key = jax.random.PRNGKey(42)
+    xs = jax.random.uniform(key, (steps, n))
+    return (xs > 0.6).astype(jnp.float32) if binary else xs
+
+
+@pytest.mark.parametrize("family", _bank_families())
+def test_detector_bank_reset_bit_identical_to_scalar_reset(family):
+    """Post-drift bank reset == per-detector scalar re-init, under a MIXED
+    mask where only some members fire: masked rows become exactly the
+    scalar *_init state, unmasked rows keep every bit of their history."""
+    n = 6
+    bank = detectors.DetectorBank(family, n)
+    st = bank.init()
+    xs = _bank_stream(n, 40, binary=family in ("ddm", "eddm"))
+    for t in range(xs.shape[0]):
+        st, _ = bank.update(st, xs[t])
+    mask = jnp.array([True, False, True, False, False, True])
+    out = bank.reset(st, mask)
+    fresh = bank._init_one()                 # the scalar init state
+    for k in st:
+        got, kept, init = np.asarray(out[k]), np.asarray(st[k]), \
+            np.asarray(fresh[k])
+        for i in range(n):
+            if mask[i]:
+                np.testing.assert_array_equal(got[i], init,
+                                              err_msg=f"{family}.{k}[{i}]")
+            else:
+                np.testing.assert_array_equal(got[i], kept[i],
+                                              err_msg=f"{family}.{k}[{i}]")
+    # history actually accumulated, so the kept/init split is non-vacuous
+    assert any(not np.array_equal(np.asarray(st[k])[1],
+                                  np.asarray(fresh[k])) for k in st)
+
+
+def test_detector_bank_reset_all_and_none():
+    """Degenerate masks: all-True returns exactly init, all-False is the
+    identity."""
+    bank = detectors.DetectorBank("adwin", 4)
+    st = bank.init()
+    xs = _bank_stream(4, 25, binary=False)
+    for t in range(xs.shape[0]):
+        st, _ = bank.update(st, xs[t])
+    none = bank.reset(st, jnp.zeros((4,), bool))
+    full = bank.reset(st, jnp.ones((4,), bool))
+    for k in st:
+        np.testing.assert_array_equal(np.asarray(none[k]), np.asarray(st[k]))
+        np.testing.assert_array_equal(np.asarray(full[k]),
+                                      np.asarray(bank.init()[k]))
+
+
+def test_detector_bank_rejects_unknown_family():
+    with pytest.raises(ValueError, match="unknown detector family"):
+        detectors.DetectorBank("kswin", 4)
+
+
+def test_detector_config_dataclasses_match_legacy_kwargs():
+    """The frozen config objects drive the exact same computation as the
+    deprecated loose kwargs, which still work but warn."""
+    st0 = detectors.ph_init()
+    x = jnp.float32(0.7)
+    s_cfg, d_cfg = detectors.ph_update(
+        st0, x, detectors.PageHinkleyConfig(alpha=0.01, lam=5.0))
+    with pytest.warns(DeprecationWarning):
+        s_kw, d_kw = detectors.ph_update(st0, x, alpha=0.01, lam=5.0)
+    for k in s_cfg:
+        np.testing.assert_array_equal(np.asarray(s_cfg[k]),
+                                      np.asarray(s_kw[k]))
+    with pytest.warns(DeprecationWarning):
+        detectors.ddm_update(detectors.ddm_init(), jnp.float32(1.0),
+                             drift_k=2.5)
+    with pytest.warns(DeprecationWarning):
+        detectors.eddm_update(detectors.eddm_init(), jnp.float32(1.0),
+                              beta=0.8)
+    with pytest.raises(TypeError, match="not both"):
+        detectors.ph_update(st0, x, detectors.PageHinkleyConfig(), lam=5.0)
+
+
 # ------------------------------ ensembles -----------------------------------
 
 def test_ozabag_learns_and_detects():

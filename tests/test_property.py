@@ -14,8 +14,11 @@ from repro.kernels.rule_stats.ops import (rule_moments,
                                           rule_stats_update_segment)
 from repro.kernels.rule_stats.ref import rule_stats_ref
 from repro.kernels.split_gain.ref import split_gain_ref
+from repro.kernels.tree_route.ops import tree_route_gather
+from repro.kernels.tree_route.ref import tree_route_ref
 from repro.kernels.vht_stats.ops import stats_update_segment
 from repro.kernels.vht_stats.ref import stats_update_ref
+from repro.ml import detectors
 from repro.ml.htree import TreeConfig, init_tree, route, update_stats
 from repro.optim.adamw import dequantize, quantize
 
@@ -148,6 +151,67 @@ def test_rule_stats_segment_matches_onehot_oracle(R, m, nb, B, di, seed):
     np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
                                rtol=2e-2 if dtype != jnp.float32 else 1e-6,
                                atol=atol)
+
+
+@given(st.integers(1, 9), st.integers(1, 63), st.integers(1, 48),
+       st.integers(1, 10), st.integers(2, 8), st.integers(1, 12),
+       st.integers(0, 10**6))
+@settings(max_examples=30, deadline=None)
+def test_tree_route_gather_matches_fori_oracle(M, N, B, m, nb, depth, seed):
+    """The flat-gather multi-tree router is bit-identical to the legacy
+    per-member fori_loop on arbitrary node tables -- any children wiring
+    terminates (fixed-depth unroll), so random tables are a complete
+    adversary.  Covers the M == 1 and B == 1 fast paths."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    sa = jax.random.randint(ks[0], (M, N), -1, m)
+    sb = jax.random.randint(ks[1], (M, N), 0, nb)
+    ch = jax.random.randint(ks[2], (M, N, 2), 0, N)
+    xb = jax.random.randint(ks[3], (B, m), 0, nb)
+    out = tree_route_gather(sa, sb, ch, xb, depth)
+    ref = tree_route_ref(sa, sb, ch, xb, depth)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+_DET_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@given(st.sampled_from(["ph", "ddm", "eddm", "adwin"]),
+       st.integers(1, 12), st.integers(1, 30), st.integers(0, 1),
+       st.integers(0, 10**6))
+@settings(max_examples=25, deadline=None)
+def test_detector_bank_matches_scalar_vmap(family, N, T, di, seed):
+    """The packed DetectorBank pass is bit-identical to vmapping the
+    scalar detector oracle, over random stream lengths, bank widths
+    (including N == 1), input dtypes (f32/bf16), and a mid-stream mixed
+    reset mask."""
+    dtype = _DET_DTYPES[di]
+    bank = detectors.DetectorBank(family, N)
+    scalar = {
+        "ph": lambda s, x: detectors.ph_update(s, x, bank.config),
+        "ddm": lambda s, x: detectors.ddm_update(s, x, bank.config),
+        "eddm": lambda s, x: detectors.eddm_update(s, x, bank.config),
+        "adwin": lambda s, x: detectors.adwin_update(s, x, bank.config),
+    }[family]
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    xs = jax.random.uniform(ks[0], (T, N))
+    if family in ("ddm", "eddm"):
+        xs = (xs > 0.5).astype(jnp.float32)
+    xs = xs.astype(dtype)
+    mask = jax.random.bernoulli(ks[1], 0.4, (N,))
+    sb = sv = bank.init()
+    for t in range(T):
+        sb, db = bank.update(sb, xs[t])
+        sv, dv = jax.vmap(scalar)(sv, xs[t])
+        np.testing.assert_array_equal(np.asarray(db), np.asarray(dv))
+        if t == T // 2:                       # mixed mid-stream reset
+            sb = bank.reset(sb, mask)
+            sv = jax.tree.map(
+                lambda f, o: jnp.where(
+                    mask.reshape((-1,) + (1,) * (o.ndim - 1)), f, o),
+                bank.init(), sv)
+    for k in sb:
+        np.testing.assert_array_equal(np.asarray(sb[k]), np.asarray(sv[k]),
+                                      err_msg=f"{family}.{k}")
 
 
 @given(st.integers(0, 1_000_000))
