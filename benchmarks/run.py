@@ -2,8 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV.  --full runs paper-scale streams;
 the default fast mode (also spellable --fast, for CI symmetry) keeps the
-whole suite CPU-friendly.  Suites that track a before/after perf
-trajectory additionally write structured numbers to BENCH_<suite>.json
+whole suite CPU-friendly.  The vht suite includes the chunked-runtime
+long-stream smoke (``chunked.vht-dense200-c50``: 10k steps through the
+bounded-memory chunked driver, memory-ceiling guarded, midpoint
+checkpoint resumed and verified exact).  Suites that track a
+before/after perf trajectory additionally write structured numbers to
+BENCH_<suite>.json
 (vht -> BENCH_vht.json, amrules -> BENCH_amrules.json, clustream ->
 BENCH_clustream.json, ensemble -> BENCH_ensemble.json; --bench-json
 relocates the VHT file for backward compatibility) so the trajectory is

@@ -40,6 +40,67 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _encode_structure(tree, n_leaves: int):
+    """JSON-encode the pytree structure of dict/list/tuple/None containers,
+    with leaves replaced by their flatten-order index.  Plain-dict keys are
+    visited SORTED, matching jax.tree.flatten's order, so the encoded
+    indices address the same ``t<i>`` tensors the npz stores.  Returns
+    None when the tree contains container types we cannot round-trip --
+    custom pytree nodes, or dict SUBCLASSES (OrderedDict flattens in
+    insertion order, not sorted order, so sorting would silently permute
+    leaves) -- callers then simply lack restore_structured.
+    """
+    counter = [0]
+
+    class _Unsupported(Exception):
+        pass
+
+    def rec(node):
+        if node is None:
+            return {"t": "none"}
+        if isinstance(node, dict):
+            if type(node) is not dict or any(not isinstance(k, str)
+                                             for k in node):
+                raise _Unsupported
+            keys = sorted(node)
+            return {"t": "dict", "k": keys, "c": [rec(node[k]) for k in keys]}
+        if isinstance(node, (list, tuple)):
+            if type(node) not in (list, tuple):    # e.g. NamedTuple nodes
+                raise _Unsupported
+            kind = "list" if isinstance(node, list) else "tuple"
+            return {"t": kind, "c": [rec(v) for v in node]}
+        i = counter[0]
+        counter[0] += 1
+        return {"t": "leaf", "i": i}
+
+    try:
+        enc = rec(tree)
+    except _Unsupported:
+        return None
+    if counter[0] != n_leaves:      # a registered pytree node hid leaves
+        return None
+    # a custom node holding exactly one leaf would pass the count check
+    # while being encoded AS the leaf: round-trip the encoding against
+    # jax's own treedef so any structural drift falls back to None
+    skeleton = _decode_structure(enc, list(range(n_leaves)))
+    if jax.tree.structure(skeleton) != jax.tree.structure(tree):
+        return None
+    return enc
+
+
+def _decode_structure(enc, leaves):
+    if enc["t"] == "none":
+        return None
+    if enc["t"] == "dict":
+        return {k: _decode_structure(c, leaves)
+                for k, c in zip(enc["k"], enc["c"])}
+    if enc["t"] == "list":
+        return [_decode_structure(c, leaves) for c in enc["c"]]
+    if enc["t"] == "tuple":
+        return tuple(_decode_structure(c, leaves) for c in enc["c"])
+    return leaves[enc["i"]]
+
+
 class CheckpointManager:
     def __init__(self, directory, *, keep: int = 3, async_write: bool = True):
         self.dir = Path(directory)
@@ -57,8 +118,10 @@ class CheckpointManager:
         leaves, treedef = _flatten(tree)
         # device -> host (gather across shards); numpy() forces the copy now
         host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
-        paths = [str(p) for p in
-                 jax.tree_util.tree_flatten_with_path(tree)[0].__iter__()]
+        # self-describing structure: lets restore_structured rebuild the
+        # tree with NO template (mid-stream resume of an engine carry whose
+        # feedback structure only exists inside a killed process)
+        structure = _encode_structure(tree, len(host_leaves))
         keypaths = [jax.tree_util.keystr(kp) for kp, _ in
                     jax.tree_util.tree_flatten_with_path(tree)[0]]
 
@@ -78,6 +141,7 @@ class CheckpointManager:
                     "time": time.time(),
                     "n_tensors": len(host_leaves),
                     "keypaths": keypaths,
+                    "structure": structure,
                     "tensors": [
                         {"key": f"t{i}", "shape": list(a.shape),
                          "dtype": str(a.dtype),
@@ -133,14 +197,7 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, tree_like, step: int | None = None, *, shardings=None,
-                verify: bool = True):
-        """Restore into the structure of `tree_like`.
-
-        shardings: optional matching pytree of NamedSharding -- enables
-        elastic restore onto a different mesh than the checkpoint was
-        written from.
-        """
+    def _load_step(self, step: int | None):
         self.wait()
         if step is None:
             step = self.latest_step()
@@ -149,6 +206,50 @@ class CheckpointManager:
         d = self.dir / f"step_{step:010d}"
         manifest = json.loads((d / "manifest.json").read_text())
         data = np.load(d / "tensors.npz")
+        return step, manifest, data
+
+    def _load_leaf(self, data, manifest, i: int, *, verify: bool):
+        a = data[f"t{i}"]
+        meta = manifest["tensors"][i]
+        if meta["dtype"] == "bfloat16" and a.dtype == np.uint16:
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        if verify:
+            crc = hashlib.md5(np.ascontiguousarray(a).tobytes()).hexdigest()
+            if crc != meta["crc"]:
+                raise IOError(f"checksum mismatch on tensor {i} "
+                              f"({manifest['keypaths'][i]})")
+        return a
+
+    def restore_structured(self, step: int | None = None, *,
+                           verify: bool = True):
+        """Restore with NO template tree: the manifest's self-describing
+        structure rebuilds the dict/list/tuple pytree and leaves come back
+        as host numpy arrays (bit-exact).  This is the mid-stream resume
+        path -- a fresh process does not know the engine carry's feedback
+        structure, the chunk cursor, or the metric accumulator shape, so
+        the checkpoint itself must carry the structure.  Returns
+        (tree, step)."""
+        step, manifest, data = self._load_step(step)
+        structure = manifest.get("structure")
+        if structure is None:
+            raise ValueError(
+                f"checkpoint step {step} has no stored structure (written "
+                "by an older version or with custom pytree nodes); use "
+                "restore(tree_like) instead")
+        leaves = [self._load_leaf(data, manifest, i, verify=verify)
+                  for i in range(manifest["n_tensors"])]
+        return _decode_structure(structure, leaves), step
+
+    def restore(self, tree_like, step: int | None = None, *, shardings=None,
+                verify: bool = True):
+        """Restore into the structure of `tree_like`.
+
+        shardings: optional matching pytree of NamedSharding -- enables
+        elastic restore onto a different mesh than the checkpoint was
+        written from.
+        """
+        step, manifest, data = self._load_step(step)
         leaves, treedef = _flatten(tree_like)
         if len(leaves) != manifest["n_tensors"]:
             raise ValueError(
@@ -158,16 +259,7 @@ class CheckpointManager:
         sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
                      else [None] * len(leaves))
         for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
-            a = data[f"t{i}"]
-            meta = manifest["tensors"][i]
-            if meta["dtype"] == "bfloat16" and a.dtype == np.uint16:
-                import ml_dtypes
-                a = a.view(ml_dtypes.bfloat16)
-            if verify:
-                crc = hashlib.md5(np.ascontiguousarray(a).tobytes()).hexdigest()
-                if crc != meta["crc"]:
-                    raise IOError(f"checksum mismatch on tensor {i} "
-                                  f"({manifest['keypaths'][i]})")
+            a = self._load_leaf(data, manifest, i, verify=verify)
             if tuple(a.shape) != tuple(ref.shape):
                 raise ValueError(
                     f"shape mismatch on {manifest['keypaths'][i]}: "

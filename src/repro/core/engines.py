@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.topology import (Grouping, Topology, build_learner_topology)
+from repro.data.pipeline import Chunk, ChunkedStream
 from repro.distributed.sharding import leading_axis_spec, mesh_context
 
 
@@ -98,6 +99,33 @@ def _unstack_payloads(payloads):
     return [jax.tree.map(lambda x: x[i], payloads) for i in range(n)]
 
 
+def _require_no_boundaries(topology: Topology):
+    """A topology with chunk-boundary hooks on a NON-chunked driver would
+    silently never fire them (e.g. boundary-mode CluStream's macro
+    centroids frozen at init forever) -- fail loudly instead."""
+    names = [n for n, p in topology.processors.items()
+             if p.boundary is not None]
+    if names:
+        raise ValueError(
+            f"processors {names} have chunk-boundary hooks, which only "
+            "fire on the chunked driver: pass a ChunkedStream or "
+            "chunk_len= to run_stream (or use a boundary-free config, "
+            "e.g. CluStream macro_impl='step')")
+
+
+def _concat_outputs(segments):
+    """The ONE output-stacking path: a list of output pytrees, each stacked
+    on a leading step axis, becomes a single stacked pytree.  Both the
+    monolithic scan (primed first step + scanned rest, including the n == 1
+    stream where the scan segment is empty) and the chunked driver funnel
+    through here, so there is exactly one concatenation semantics."""
+    if not segments:
+        return {}
+    if len(segments) == 1:
+        return segments[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *segments)
+
+
 class LocalEngine(Engine):
     """Sequential reference engine (paper: the local execution engine).
 
@@ -113,13 +141,38 @@ class LocalEngine(Engine):
 
     def run_stream(self, topology: Topology, states, payloads):
         """Eager per-step loop: the reference semantics the scanned engines
-        are tested against.  Returns (states, list of per-step outputs)."""
+        are tested against.  Returns (states, list of per-step outputs);
+        ``repro.core.evaluation.stack_outputs`` normalizes the list to the
+        scanned engines' stacked-pytree shape for parity checks.
+
+        A ``ChunkedStream`` is accepted too: valid steps run eagerly and
+        processor ``boundary`` hooks fire between chunks -- the eager
+        oracle for the chunked drivers (boundary-phase semantics
+        included)."""
         topology = self._as_topology(topology)
         outs = []
+        if isinstance(payloads, ChunkedStream):
+            for chunk in payloads:
+                live = jax.tree.map(lambda x: x[:chunk.length], chunk.payload)
+                for payload in _unstack_payloads(live):
+                    states, out = self.step(topology, states, payload)
+                    outs.append(out)
+                states = self._apply_boundaries(topology, states)
+            return states, outs
+        _require_no_boundaries(topology)
         for payload in _unstack_payloads(payloads):
             states, out = self.step(topology, states, payload)
             outs.append(out)
         return states, outs
+
+    def _apply_boundaries(self, topology: Topology, states):
+        hooks = {n: p.boundary for n, p in topology.processors.items()
+                 if p.boundary is not None}
+        if hooks:
+            states = dict(states)
+            for name, hook in hooks.items():
+                states[name] = hook(states[name])
+        return states
 
     def step(self, topology: Topology, states, source_payload):
         topology = self._as_topology(topology)
@@ -165,10 +218,14 @@ class JitEngine(Engine):
         self.donate = donate
         self._compiled: dict[int, Callable] = {}
         self._compiled_scan: dict[int, Callable] = {}
+        self._compiled_chunk: dict[int, Callable] = {}
+        self._compiled_boundary: dict[int, Callable | None] = {}
 
     def _evict_topology(self, topology: Topology):
         self._compiled.pop(id(topology), None)
         self._compiled_scan.pop(id(topology), None)
+        self._compiled_chunk.pop(id(topology), None)
+        self._compiled_boundary.pop(id(topology), None)
 
     def init(self, topology: Topology, key):
         states = _init_states(self._as_topology(topology), key)
@@ -243,7 +300,9 @@ class JitEngine(Engine):
             self._compiled_scan[key] = fn
         return fn
 
-    def run_stream(self, topology: Topology, carry, payloads):
+    def run_stream(self, topology: Topology, carry, payloads, *,
+                   chunk_len: int | None = None, on_chunk=None,
+                   collect_outputs: bool = True):
         """Fused prequential execution: the whole stream of micro-batches is
         ONE compiled program (jax.lax.scan over the topology step, carries
         donated), so N batches cost one dispatch instead of N.
@@ -255,23 +314,170 @@ class JitEngine(Engine):
         (carry, outputs stacked on the leading axis) and matches the
         per-step loop bit for bit.  Accepts a Topology or a bare learner
         (see Engine._as_topology).
+
+        Passing a ``ChunkedStream`` (or ``chunk_len``, which wraps stacked
+        payloads into one) routes through the chunked runtime instead: the
+        same scanned step driven chunk by chunk at bounded memory -- see
+        ``run_stream_chunked`` for the chunk-path semantics and knobs.
         """
+        if chunk_len is not None and not isinstance(payloads, ChunkedStream):
+            payloads = ChunkedStream(payloads, chunk_len)
+        if isinstance(payloads, ChunkedStream):
+            return self.run_stream_chunked(
+                topology, carry, payloads, on_chunk=on_chunk,
+                collect_outputs=collect_outputs)
+        if on_chunk is not None or not collect_outputs:
+            raise ValueError(
+                "on_chunk / collect_outputs are chunked-runtime knobs: "
+                "pass a ChunkedStream or chunk_len, or drop them -- the "
+                "monolithic scan would silently ignore the reduction and "
+                "materialize the full [T, ...] outputs")
         topology = self._as_topology(topology)
+        _require_no_boundaries(topology)
         payloads = _stack_payloads(payloads)
         n = jax.tree.leaves(payloads)[0].shape[0]
-        outs0 = None
+        segments = []
         if carry["feedback"] is None:
-            first = jax.tree.map(lambda x: x[0], payloads)
-            carry, out0 = self.step(topology, carry, first)
-            outs0 = jax.tree.map(lambda x: x[None], out0)
-            if n == 1:
-                return carry, outs0
-            payloads = jax.tree.map(lambda x: x[1:], payloads)
-        with self._mesh_ctx():
-            carry, outs = self._scan_fn(topology)(carry, payloads)
-        if outs0 is not None:
-            outs = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
-                                outs0, outs)
+            carry, seg0, payloads = self._prime_first_step(
+                topology, carry, payloads)
+            segments.append(seg0)
+            n -= 1
+        if n:
+            with self._mesh_ctx():
+                carry, outs = self._scan_fn(topology)(carry, payloads)
+            segments.append(outs)
+        return carry, _concat_outputs(segments)
+
+    def _prime_first_step(self, topology: Topology, carry, payloads):
+        """Run step 0 through the plain jitted step to materialize the
+        feedback-carry structure (engine.init starts with feedback=None).
+        Shared by the monolithic scan and the chunked driver's first
+        chunk, so their priming semantics cannot diverge -- the
+        chunked-vs-monolithic bit-identity depends on it.  Returns
+        (carry, the primed output as a 1-step segment, remaining
+        payloads)."""
+        first = jax.tree.map(lambda x: x[0], payloads)
+        carry, out0 = self.step(topology, carry, first)
+        seg0 = jax.tree.map(lambda x: x[None], out0)
+        return carry, seg0, jax.tree.map(lambda x: x[1:], payloads)
+
+    # ------------------------------------------------ chunked stream path
+
+    def _chunk_scan_fn(self, topology: Topology):
+        """The masked chunk program: a scan whose step is lax.cond-gated on
+        the chunk's validity mask, so the zero-padded tail of the last
+        chunk is a carry-preserving no-op (outputs zeroed, trimmed by the
+        driver).  Compiled once per chunk shape -- jit re-specializes on
+        the (chunk_len-1)-step first chunk and the full-length steady
+        state, and every subsequent chunk reuses those two executables."""
+        key = id(topology)
+        fn = self._compiled_chunk.get(key)
+        if fn is None:
+            step = self._make_step(topology)
+
+            def chunk_fn(carry, payloads, valid):
+                out_sd = jax.eval_shape(
+                    lambda c, p: step(c["states"], c["feedback"], p),
+                    carry, jax.tree.map(lambda x: x[0], payloads))[2]
+
+                def body(c, xv):
+                    payload, v = xv
+
+                    def live(c):
+                        states, fb, outs = step(c["states"], c["feedback"],
+                                                payload)
+                        return {"states": states, "feedback": fb}, outs
+
+                    def dead(c):
+                        zeros = jax.tree.map(
+                            lambda s: jnp.zeros(s.shape, s.dtype), out_sd)
+                        return c, zeros
+
+                    return jax.lax.cond(v, live, dead, c)
+
+                return jax.lax.scan(body, carry, (payloads, valid))
+
+            donate = (0,) if self.donate and \
+                jax.default_backend() != "cpu" else ()
+            fn = jax.jit(chunk_fn, donate_argnums=donate)
+            self._compiled_chunk[key] = fn
+        return fn
+
+    def _make_boundary(self, topology: Topology):
+        """The chunk-boundary phase: apply every processor's ``boundary``
+        hook to its state.  Returns None when no processor has one (the
+        common case -- zero per-chunk overhead)."""
+        hooks = {n: p.boundary for n, p in topology.processors.items()
+                 if p.boundary is not None}
+        if not hooks:
+            return None
+
+        def boundary(carry):
+            states = dict(carry["states"])
+            for name, hook in hooks.items():
+                states[name] = hook(states[name])
+            return {"states": states, "feedback": carry["feedback"]}
+
+        return boundary
+
+    def _boundary_fn(self, topology: Topology):
+        key = id(topology)
+        if key not in self._compiled_boundary:
+            fn = self._make_boundary(topology)
+            self._compiled_boundary[key] = \
+                jax.jit(fn) if fn is not None else None
+        return self._compiled_boundary[key]
+
+    def run_stream_chunked(self, topology: Topology, carry, chunks, *,
+                           on_chunk=None, collect_outputs: bool = True):
+        """Chunked stream runtime: drive the scanned topology step chunk by
+        chunk, bit-identical to the monolithic scan but at bounded memory
+        -- stream length is no longer capped by what fits on device.
+
+        ``chunks`` is a ChunkedStream or any iterable of ``Chunk``s.  Each
+        chunk runs through the masked scan program (compiled once per chunk
+        shape); the padded tail of the final chunk is a no-op step and its
+        outputs are trimmed.  Between chunks the driver fires processor
+        ``boundary`` hooks (work hoisted out of the step HLO, e.g.
+        CluStream's macro k-means) and calls ``on_chunk(outputs, chunk,
+        carry)`` -- the streaming reduction point for per-chunk metrics and
+        mid-stream checkpoints.  ``collect_outputs=False`` drops the
+        per-chunk outputs after ``on_chunk`` instead of concatenating a
+        ``[T, ...]`` result, which is the whole point for long streams.
+        """
+        topology = self._as_topology(topology)
+        boundary = self._boundary_fn(topology)
+        segments = []
+        for chunk in chunks:
+            carry, outs = self._run_chunk(topology, carry, chunk)
+            if boundary is not None:
+                with self._mesh_ctx():
+                    carry = boundary(carry)
+            if on_chunk is not None:
+                on_chunk(outs, chunk, carry)
+            if collect_outputs:
+                segments.append(outs)
+        return carry, _concat_outputs(segments) if collect_outputs else None
+
+    def _run_chunk(self, topology: Topology, carry, chunk: Chunk):
+        """One chunk through the masked scan; the first chunk of a fresh
+        stream primes the feedback-carry structure through the plain jitted
+        step exactly like the monolithic path (bit-identity)."""
+        payloads, valid = chunk.payload, chunk.valid
+        segments = []
+        if carry["feedback"] is None:
+            carry, seg0, payloads = self._prime_first_step(
+                topology, carry, payloads)
+            segments.append(seg0)
+            valid = valid[1:]
+        if jax.tree.leaves(payloads)[0].shape[0]:
+            with self._mesh_ctx():
+                carry, outs = self._chunk_scan_fn(topology)(
+                    carry, payloads, valid)
+            segments.append(outs)
+        outs = _concat_outputs(segments)
+        if chunk.padded:
+            outs = jax.tree.map(lambda x: x[:chunk.length], outs)
         return carry, outs
 
 
@@ -329,20 +535,14 @@ class ShardMapEngine(JitEngine):
 
     def _make_step(self, topology: Topology):
         base = super()._make_step(topology)
-        hints = {name: hint for name, proc in topology.processors.items()
-                 if (hint := proc.state_sharding()) is not None}
-        if not hints:
+        if all(p.state_sharding() is None
+               for p in topology.processors.values()):
             return base
 
         def step(states, feedback, source_payload):
             states, fb, outputs = base(states, feedback, source_payload)
-            states = dict(states)
-            for name, hint in hints.items():
-                states[name] = jax.tree.map(
-                    lambda x, s: self._hint_leaf(x, s, place=False),
-                    states[name], hint,
-                    is_leaf=lambda v: v is None or isinstance(v, P))
-            return states, fb, outputs
+            return self._apply_hints(topology, states, place=False), \
+                fb, outputs
 
         return step
 
@@ -352,9 +552,49 @@ class ShardMapEngine(JitEngine):
         # replicates its k-means inputs only when tracing under a mesh)
         return mesh_context(self.mesh)
 
+    def _apply_hints(self, topology: Topology, states, *, place: bool):
+        out = dict(states)
+        for name, proc in topology.processors.items():
+            hint = proc.state_sharding()
+            if hint is None:
+                continue
+            out[name] = jax.tree.map(
+                lambda x, s: self._hint_leaf(x, s, place=place),
+                out[name], hint,
+                is_leaf=lambda v: v is None or isinstance(v, P))
+        return out
+
+    def _make_boundary(self, topology: Topology):
+        """Chunk-boundary phase under a mesh: after the hooks run, the
+        hinted leaves are re-constrained exactly like every scanned step,
+        so the carry stays physically partitioned across chunk boundaries
+        however the boundary computation (e.g. CluStream's replicated
+        macro gather) was sharded."""
+        base = super()._make_boundary(topology)
+        if base is None:
+            return None
+
+        def boundary(carry):
+            carry = base(carry)
+            states = self._apply_hints(topology, carry["states"],
+                                       place=False)
+            return {"states": states, "feedback": carry["feedback"]}
+
+        return boundary
+
     def init(self, topology: Topology, key):
         topology = self._as_topology(topology)
         carry = super().init(topology, key)
+        carry["states"] = self._shard_states(topology, carry["states"])
+        return carry
+
+    def place_carry(self, topology, carry):
+        """Re-place a host-restored carry (checkpoint resume) per-shard,
+        through the SAME placement pass as ``init`` (sharding hints plus
+        the KEY-grouping fallback), so a resumed chunked run is as
+        physically partitioned as the run that wrote the checkpoint."""
+        topology = self._as_topology(topology)
+        carry = dict(carry)
         carry["states"] = self._shard_states(topology, carry["states"])
         return carry
 
@@ -366,20 +606,12 @@ class ShardMapEngine(JitEngine):
         return None
 
     def _shard_states(self, topology, states):
-        out = {}
-        for name, st in states.items():
-            proc = topology.processors[name]
-            hint = proc.state_sharding()
-            g = self._grouping_of(topology, name)
-            if hint is not None:
-                out[name] = jax.tree.map(
-                    lambda x, s: self._hint_leaf(x, s, place=True),
-                    st, hint,
-                    is_leaf=lambda v: v is None or isinstance(v, P))
-            elif g is Grouping.KEY:
+        out = self._apply_hints(topology, states, place=True)
+        for name, st in out.items():
+            if topology.processors[name].state_sharding() is not None:
+                continue
+            if self._grouping_of(topology, name) is Grouping.KEY:
                 out[name] = jax.tree.map(
                     lambda x: self._hint_leaf(
                         x, leading_axis_spec("model", x), place=True), st)
-            else:
-                out[name] = st
         return out

@@ -14,8 +14,36 @@ import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.topology import Task
+
+
+def stack_outputs(outs):
+    """Normalize engine ``run_stream`` outputs to ONE stacked pytree.
+
+    ``LocalEngine`` returns a list of per-step output dicts (eager
+    reference semantics); the scanned/chunked engines return a pytree
+    stacked on a leading step axis.  Parity checks and metric reductions
+    go through this helper instead of hand-rolling the conversion."""
+    if isinstance(outs, list):
+        if not outs:
+            return {}
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return outs
+
+
+def unstack_outputs(outs):
+    """Inverse of ``stack_outputs``: a stacked pytree becomes the
+    LocalEngine-shaped list of per-step output dicts."""
+    if isinstance(outs, list):
+        return outs
+    leaves = jax.tree.leaves(outs)
+    if not leaves:
+        return []
+    n = leaves[0].shape[0]
+    return [jax.tree.map(lambda x: x[i], outs) for i in range(n)]
 
 
 @dataclasses.dataclass
@@ -62,3 +90,155 @@ class PrequentialEvaluation(Task):
         return PrequentialResult(
             metric=metric, throughput=seen / dt, curve=curve,
             extra={"state": state})
+
+
+class MetricAccumulator:
+    """Streaming prequential metric reduction.
+
+    The monolithic scan materializes ``[T, ...]`` metric outputs and
+    reduces at the end; on an unbounded stream that is exactly the memory
+    cliff the chunked runtime removes.  This accumulator consumes one
+    chunk's stacked metrics at a time -- only ``[chunk_len]`` scalars ever
+    cross to host -- and keeps running sums plus the per-batch curve.  Its
+    state round-trips through ``state()``/``load()`` so a mid-stream
+    checkpoint reproduces the uninterrupted run's final metrics exactly.
+    """
+
+    def __init__(self):
+        self.correct = 0.0
+        self.abs_err = 0.0
+        self.seen = 0.0
+        self.curve: list[float] = []
+
+    def update(self, metrics):
+        """Fold in one chunk's stacked metrics dict (leaves [steps, ...])."""
+        seen = np.asarray(metrics["seen"], np.float64)
+        corr = np.asarray(metrics.get("correct", np.zeros_like(seen)),
+                          np.float64)
+        abse = np.asarray(metrics.get("abs_err", np.zeros_like(seen)),
+                          np.float64)
+        self.correct += float(corr.sum())
+        self.abs_err += float(abse.sum())
+        self.seen += float(seen.sum())
+        per = np.where(seen > 0, (np.where(corr > 0, corr, -abse)) /
+                       np.maximum(seen, 1e-9), 0.0)
+        self.curve.extend(float(v) for v in per)
+
+    @property
+    def metric(self) -> float:
+        if not self.seen:
+            return 0.0
+        return (self.correct / self.seen) if self.correct \
+            else (self.abs_err / self.seen)
+
+    def state(self):
+        """Checkpointable pytree of the accumulator."""
+        return {"correct": np.float64(self.correct),
+                "abs_err": np.float64(self.abs_err),
+                "seen": np.float64(self.seen),
+                "curve": np.asarray(self.curve, np.float64)}
+
+    def load(self, state):
+        self.correct = float(state["correct"])
+        self.abs_err = float(state["abs_err"])
+        self.seen = float(state["seen"])
+        self.curve = [float(v) for v in np.asarray(state["curve"])]
+        return self
+
+
+class ChunkedPrequentialEvaluation(Task):
+    """Prequential task on the chunked stream runtime.
+
+    Drives ``engine.run_stream`` over a ``ChunkedStream``: metrics reduce
+    per chunk through a ``MetricAccumulator`` (prequential curves stream
+    to host incrementally; no ``[T, ...]`` output pytree is ever
+    materialized), and an optional ``CheckpointManager`` snapshots the
+    full resumable state -- engine carry (states + feedback), the chunk
+    cursor, the stream RNG key, and the metric accumulator -- every
+    ``checkpoint_every`` chunks.  ``run(resume=True)`` picks up a killed
+    run mid-stream bit-identically: the resumed run's final carry and
+    metrics equal the uninterrupted run's.
+    """
+
+    def __init__(self, learner, stream, *, engine=None,
+                 checkpoint=None, checkpoint_every: int = 1, key=None,
+                 on_chunk=None):
+        from repro.core.engines import JitEngine
+        self.learner = learner
+        self.stream = stream
+        self.engine = engine if engine is not None else JitEngine()
+        if not hasattr(self.engine, "run_stream_chunked"):
+            raise TypeError(
+                f"{type(self.engine).__name__} has no chunked driver; "
+                "use JitEngine/ShardMapEngine (LocalEngine's eager "
+                "ChunkedStream loop is a parity oracle, not an "
+                "evaluation driver)")
+        self.checkpoint = checkpoint
+        self.checkpoint_every = max(1, int(checkpoint_every))
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.on_chunk = on_chunk     # optional extra per-chunk callback,
+                                     # chained after the metric reduction
+
+    def _save(self, chunk_index: int, carry, acc: MetricAccumulator):
+        cursor = chunk_index + 1          # next chunk to run
+        self.checkpoint.save(cursor, {
+            "carry": carry,
+            "cursor": np.int64(cursor),
+            "key": self.key,
+            "metrics": acc.state(),
+        })
+
+    def run(self, *, resume: bool = True) -> PrequentialResult:
+        engine, learner = self.engine, self.learner
+        acc = MetricAccumulator()
+        carry = None
+        start = self.stream.start_chunk
+        if resume and self.checkpoint is not None \
+                and self.checkpoint.latest_step() is not None:
+            blob, _ = self.checkpoint.restore_structured()
+            carry = blob["carry"]
+            place = getattr(engine, "place_carry", None)
+            if place is not None:
+                carry = place(learner, carry)
+            start = int(blob["cursor"])
+            self.key = jnp.asarray(blob["key"])
+            acc.load(blob["metrics"])
+        if carry is None:
+            carry = engine.init(learner, self.key)
+        stream = self.stream.starting_at(start)
+        seen0 = acc.seen          # restored instances: not processed now
+
+        every = self.checkpoint_every
+        # throughput excludes the first chunk (where the chunk programs
+        # compile), mirroring PrequentialEvaluation's compile exclusion;
+        # timed[...] = (t after first chunk, instances seen by then)
+        timed: list = []
+
+        def on_chunk(outs, chunk, carry):
+            acc.update(outs["metrics"])
+            if not timed:
+                jax.block_until_ready(jax.tree.leaves(carry)[0])
+                timed.append((time.perf_counter(), acc.seen))
+            if self.checkpoint is not None \
+                    and (chunk.index + 1) % every == 0:
+                self._save(chunk.index, carry, acc)
+            if self.on_chunk is not None:
+                self.on_chunk(outs, chunk, carry)
+
+        t0 = time.perf_counter()
+        carry, _ = engine.run_stream(learner, carry, stream,
+                                     on_chunk=on_chunk,
+                                     collect_outputs=False)
+        jax.block_until_ready(jax.tree.leaves(carry)[0])
+        t_end = time.perf_counter()
+        wall = max(t_end - t0, 1e-9)
+        if len(timed) == 0 or acc.seen == timed[0][1]:
+            thr = (acc.seen - seen0) / wall     # single-chunk stream
+        else:
+            thr = (acc.seen - timed[0][1]) / max(t_end - timed[0][0], 1e-9)
+        if self.checkpoint is not None:
+            self.checkpoint.wait()
+        return PrequentialResult(
+            metric=acc.metric, throughput=thr, curve=acc.curve,
+            extra={"carry": carry, "seen": acc.seen,
+                   "chunks": len(stream), "wall_s": wall})

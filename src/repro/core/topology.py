@@ -49,6 +49,13 @@ class Processor:
 
     name: str = "processor"
 
+    # Optional chunk-boundary hook for the chunked stream runtime: a
+    # processor may expose ``boundary(state) -> state`` and the chunked
+    # driver invokes it between chunks (outside the scanned step, so work
+    # hoisted here -- e.g. CluStream's macro k-means -- leaves the step
+    # HLO entirely).  ``None`` means no hook; engines skip the dispatch.
+    boundary: Callable | None = None
+
     def init_state(self, key):  # pragma: no cover - interface
         return {}
 
@@ -196,6 +203,12 @@ class LearnerProcessor(Processor):
     def __init__(self, learner, name: str | None = None):
         self.learner = learner
         self.name = name or type(learner).__name__.lower()
+        # chunk-boundary hook: delegate iff the learner has one, so the
+        # chunked driver's `boundary is None` fast path stays cheap for
+        # learners without boundary-phase work
+        fn = getattr(learner, "boundary", None)
+        if fn is not None:
+            self.boundary = fn
 
     def init_state(self, key):
         return self.learner.init(key)

@@ -6,9 +6,12 @@ from repro.data.generators import (
     CovtypeLikeGenerator,
     bin_numeric,
 )
-from repro.data.pipeline import StreamPipeline, TokenStream
+from repro.data.pipeline import (Chunk, ChunkedStream, StreamPipeline,
+                                 TokenStream)
 
 __all__ = [
+    "Chunk",
+    "ChunkedStream",
     "RandomTreeGenerator",
     "RandomTweetGenerator",
     "WaveformGenerator",

@@ -2,16 +2,23 @@
 
 ``StreamPipeline`` turns any generator into a prequential micro-batch
 stream with host-side double-buffered prefetch and optional sharded
-device_put (shuffle grouping over the data axis).  ``TokenStream`` is the
-LM-side equivalent: an infinite deterministic token stream for the training
-examples/benchmarks (synthetic LM data; the real deployment would plug a
-tokenized corpus reader with identical semantics).
+device_put (shuffle grouping over the data axis).  ``ChunkedStream`` is
+the bounded-memory source for the chunked stream runtime: an iterator of
+fixed-shape ``[chunk_len, ...]`` payload chunks (last chunk zero-padded
+with an explicit validity mask) with the same double-buffered prefetch,
+so streams longer than device memory run at flat footprint.
+``TokenStream`` is the LM-side equivalent: an infinite deterministic
+token stream for the training examples/benchmarks (synthetic LM data;
+the real deployment would plug a tokenized corpus reader with identical
+semantics).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +75,178 @@ class StreamPipeline:
             xs.append(x)
             ys.append(y)
         return jnp.stack(xs), jnp.stack(ys)
+
+
+@dataclasses.dataclass
+class Chunk:
+    """One fixed-shape slice of a stream.
+
+    ``payload`` leaves have leading dimension ``chunk_len`` (the last chunk
+    of a stream whose length the chunk size does not divide is zero-padded
+    up to it); ``valid`` is the ``[chunk_len]`` bool mask of real steps and
+    ``length`` its static count, so drivers can trim outputs and run the
+    padded tail through a masked no-op step.
+    """
+
+    index: int          # chunk position in the stream
+    payload: Any        # pytree, leaves [chunk_len, ...]
+    valid: Any          # [chunk_len] bool, True for real steps
+    length: int         # number of valid (un-padded) steps
+
+    @property
+    def chunk_len(self) -> int:
+        return int(jax.tree.leaves(self.payload)[0].shape[0])
+
+    @property
+    def padded(self) -> bool:
+        return self.length < self.chunk_len
+
+
+def _pad_chunk(index: int, payload, chunk_len: int) -> Chunk:
+    """Zero-pad a raw (possibly short, final) payload up to chunk_len."""
+    length = int(jax.tree.leaves(payload)[0].shape[0])
+    if length > chunk_len:
+        raise ValueError(f"chunk {index} has {length} steps > {chunk_len}")
+    if length == 0:
+        # an all-padding chunk would feed fabricated zeros through the
+        # feedback-priming step of a fresh stream; require >= 1 real step
+        raise ValueError(f"chunk {index} has 0 steps")
+    if length < chunk_len:
+        pad = chunk_len - length
+        payload = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [jnp.asarray(x),
+                 jnp.zeros((pad,) + tuple(x.shape[1:]),
+                           jnp.asarray(x).dtype)], 0), payload)
+    valid = jnp.arange(chunk_len) < length
+    return Chunk(index=index, payload=payload, valid=valid, length=length)
+
+
+class ChunkedStream:
+    """Bounded-memory stream source: fixed-shape payload chunks, prefetched.
+
+    The SAMOA constraint is that streams are unbounded; materializing the
+    whole stream as a stacked ``[T, ...]`` pytree caps T at device memory.
+    A ChunkedStream instead yields ``Chunk``s of ``chunk_len`` steps; a
+    background thread generates/slices chunk k+1 and starts its (async)
+    ``jax.device_put`` while chunk k runs, so the device only ever holds a
+    couple of chunks of payload (double-buffering).
+
+    Two constructions:
+
+      * ``ChunkedStream(payloads, chunk_len)`` -- split an already stacked
+        payload pytree (or list of per-step payloads) into chunks; useful
+        for parity tests and moderate streams.
+      * ``ChunkedStream.from_fn(fn, n_chunks, chunk_len)`` -- ``fn(i)``
+        produces chunk i's raw payload (leaves ``[<=chunk_len, ...]``) on
+        demand, so the full stream never exists anywhere; this is the
+        unbounded-stream path.
+
+    ``starting_at(k)`` returns a view beginning at chunk k (mid-stream
+    checkpoint resume).  Iteration is restartable: each ``__iter__`` spawns
+    a fresh producer.
+    """
+
+    def __init__(self, payloads=None, chunk_len: int = 0, *,
+                 fetch: Callable[[int], Any] | None = None,
+                 n_chunks: int | None = None, n_steps: int | None = None,
+                 start_chunk: int = 0, prefetch: int = 2, sharding=None,
+                 to_device: bool = True):
+        if chunk_len < 1:
+            raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
+        self.chunk_len = int(chunk_len)
+        self.start_chunk = int(start_chunk)
+        self.prefetch = prefetch
+        self.sharding = sharding
+        self.to_device = to_device
+        if fetch is not None:
+            if n_chunks is None:
+                raise ValueError("from_fn streams need n_chunks")
+            self._fetch = fetch
+            self.n_chunks = int(n_chunks)
+            self.n_steps = n_steps
+        else:
+            if hasattr(payloads, "__next__"):
+                payloads = list(payloads)
+            if isinstance(payloads, list):
+                payloads = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+            t = int(jax.tree.leaves(payloads)[0].shape[0])
+            self.n_steps = t
+            self.n_chunks = -(-t // self.chunk_len)
+            cl = self.chunk_len
+            self._fetch = lambda i, _p=payloads: jax.tree.map(
+                lambda x: x[i * cl:(i + 1) * cl], _p)
+        if not (0 <= self.start_chunk <= self.n_chunks):
+            raise ValueError(f"start_chunk {self.start_chunk} outside "
+                             f"[0, {self.n_chunks}]")
+
+    @classmethod
+    def from_fn(cls, fn: Callable[[int], Any], n_chunks: int,
+                chunk_len: int, **kw) -> "ChunkedStream":
+        """Generator-backed stream: ``fn(chunk_index)`` -> raw payload of
+        up to ``chunk_len`` steps.  Nothing is materialized beyond the
+        prefetch window."""
+        return cls(fetch=fn, n_chunks=n_chunks, chunk_len=chunk_len, **kw)
+
+    def starting_at(self, chunk: int) -> "ChunkedStream":
+        """A view of the same stream beginning at `chunk` (resume)."""
+        out = ChunkedStream.__new__(ChunkedStream)
+        out.__dict__.update(self.__dict__)
+        if not (0 <= chunk <= self.n_chunks):
+            raise ValueError(f"start chunk {chunk} outside "
+                             f"[0, {self.n_chunks}]")
+        out.start_chunk = int(chunk)
+        return out
+
+    def _produce(self, q, stop):
+        def put(item) -> bool:
+            # bounded put that gives up when the consumer abandoned the
+            # iterator (early break / error downstream): otherwise the
+            # thread would block on the full queue forever, pinning the
+            # prefetched device payload buffers
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        try:
+            for i in range(self.start_chunk, self.n_chunks):
+                chunk = _pad_chunk(i, self._fetch(i), self.chunk_len)
+                if self.to_device:
+                    # async host->device copy of chunk k+1 overlaps chunk
+                    # k's compute (device_put returns immediately)
+                    dput = (lambda x: jax.device_put(x, self.sharding)) \
+                        if self.sharding is not None else jax.device_put
+                    chunk = dataclasses.replace(
+                        chunk, payload=jax.tree.map(dput, chunk.payload))
+                if not put(chunk):
+                    return
+            put(None)
+        except Exception as e:  # surfaced on the consumer side
+            put(e)
+
+    def __iter__(self):
+        q: queue.Queue = queue.Queue(maxsize=max(1, self.prefetch))
+        stop = threading.Event()
+        t = threading.Thread(target=self._produce, args=(q, stop),
+                             daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is None:
+                    return
+                if isinstance(item, Exception):
+                    raise item
+                yield item
+        finally:
+            stop.set()
+
+    def __len__(self):
+        return self.n_chunks - self.start_chunk
 
 
 class TokenStream:

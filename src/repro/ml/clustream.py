@@ -59,6 +59,15 @@ class CluStreamConfig:
     kmeans_iters: int = 10
     stats_impl: str = "auto"    # auto | segment (matmul+segment-sum) |
                                 # onehot (legacy broadcast + one-hot matmul)
+    macro_impl: str = "step"    # step (lax.cond inside every scanned step
+                                #   -- the oracle, works on any driver) |
+                                # boundary (macro k-means hoisted to the
+                                #   chunk-boundary hook: the branch leaves
+                                #   the step HLO entirely; requires the
+                                #   chunked driver and fires on the first
+                                #   boundary after each period crossing --
+                                #   align period to chunk_len * batch for
+                                #   step-mode-equivalent trigger points)
 
 
 def _impl(cc: CluStreamConfig) -> str:
@@ -67,6 +76,12 @@ def _impl(cc: CluStreamConfig) -> str:
     if cc.stats_impl not in ("segment", "onehot"):
         raise ValueError(f"unknown stats impl {cc.stats_impl!r}")
     return cc.stats_impl
+
+
+def _macro_impl(cc: CluStreamConfig) -> str:
+    if cc.macro_impl not in ("step", "boundary"):
+        raise ValueError(f"unknown macro impl {cc.macro_impl!r}")
+    return cc.macro_impl
 
 
 def init_clustream(cc: CluStreamConfig, key, init_x=None):
@@ -217,10 +232,13 @@ def merge(states):
     the first shard and callers should re-run macro_cluster on the merged
     CF state (the paper's macro phase after the shard reduction).
     """
-    cf = [{k: v for k, v in s.items() if k != "macro"} for s in states]
+    non_additive = ("macro", "macro_t")
+    cf = [{k: v for k, v in s.items() if k not in non_additive}
+          for s in states]
     out = jax.tree.map(lambda *xs: sum(xs), *cf)
-    if "macro" in states[0]:
-        out["macro"] = states[0]["macro"]
+    for k in non_additive:
+        if k in states[0]:
+            out[k] = states[0][k]
     return out
 
 
@@ -238,17 +256,32 @@ class CluStream:
     The online CF phase runs every micro-batch; the macro k-means is
     lax.cond-gated on the period boundary (the paper's periodic trigger),
     so the whole stream compiles into one program on the scanned engines.
-    State carries the latest macro centroids; metrics report the batch's
-    sum of squared distances to them.
+    State carries the latest macro centroids (plus ``macro_t``, the clock
+    at their computation); metrics report the batch's sum of squared
+    distances to them.
+
+    With ``macro_impl="boundary"`` the k-means moves to the ``boundary``
+    hook instead: the scanned step contains NO macro branch at all (at
+    large ``n_micro`` the k-means cond bloats the step HLO), and the
+    chunked driver fires the hook between chunks -- the macro recomputes
+    on the first chunk boundary after each period crossing, from exactly
+    the CF state a step-mode trigger at that instant would have used.
     """
 
     def __init__(self, cc: CluStreamConfig):
         self.cc = cc
+        if _macro_impl(cc) == "boundary":
+            # only boundary mode exposes the hook: step mode has no
+            # boundary-phase work, and advertising a no-op would make the
+            # chunked driver pay a jitted dispatch (plus, under a mesh, a
+            # re-constraint pass) on every chunk for nothing
+            self.boundary = self._boundary
 
     def init(self, key=None):
         key = jax.random.PRNGKey(0) if key is None else key
         state = init_clustream(self.cc, key)
         state["macro"] = _centroids(state)[: self.cc.n_macro]
+        state["macro_t"] = jnp.zeros((), f32)
         return state
 
     def state_sharding(self):
@@ -268,17 +301,47 @@ class CluStream:
         t0 = state["t"]
         state = dict(state)
         macro_prev = state.pop("macro")
+        macro_t_prev = state.pop("macro_t")
         state = update(state, x, cc)
-        crossed = (t0 // cc.period) != (state["t"] // cc.period)
-        state["macro"] = jax.lax.cond(
-            crossed, lambda s: macro_cluster(s, cc), lambda s: macro_prev,
-            state)
+        if _macro_impl(cc) == "step":
+            crossed = (t0 // cc.period) != (state["t"] // cc.period)
+            state["macro"], state["macro_t"] = jax.lax.cond(
+                crossed,
+                lambda s: (macro_cluster(s, cc), s["t"]),
+                lambda s: (macro_prev, macro_t_prev),
+                state)
+        else:
+            # boundary mode: the k-means branch is absent from the step
+            # HLO entirely; the chunked driver's boundary hook recomputes
+            # the macro centroids between chunks
+            state["macro"], state["macro_t"] = macro_prev, macro_t_prev
         metrics = {"seen": jnp.asarray(x.shape[0], f32),
                    "ssq": ssq(state["macro"], x),
                    "n_active": jnp.sum((state["n"] >= 1.0).astype(f32))}
         return state, metrics
 
+    def _boundary(self, state):
+        """Chunk-boundary phase (chunked driver hook, exposed as
+        ``self.boundary`` in boundary mode only): recompute the macro
+        centroids iff a period boundary was crossed since the last
+        macro."""
+        cc = self.cc
+        state = dict(state)
+        crossed = (state["t"] // cc.period) != (state["macro_t"] // cc.period)
+        state["macro"], state["macro_t"] = jax.lax.cond(
+            crossed,
+            lambda s: (macro_cluster(s, cc), s["t"]),
+            lambda s: (s["macro"], s["macro_t"]),
+            state)
+        return state
+
     def run(self, state, x_stream):
+        if _macro_impl(self.cc) == "boundary":
+            raise ValueError(
+                "macro_impl='boundary' never fires inside a plain scan "
+                "(the macro centroids would stay frozen at init): run "
+                "through an engine's chunked driver, or use "
+                "macro_impl='step'")
         def body(st, xb):
             st, m = self.step(st, xb)
             return st, m

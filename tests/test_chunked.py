@@ -1,0 +1,502 @@
+"""Chunked stream runtime: bounded-memory chunk-by-chunk execution must be
+*exactly* the semantics of the monolithic whole-stream scan -- including the
+zero-padded tail, the feedback-priming first chunk, chunk-boundary hooks,
+and a mid-stream kill/resume through the checkpoint layer."""
+
+import dataclasses
+import pathlib
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.engines import JitEngine, LocalEngine
+from repro.core.evaluation import (ChunkedPrequentialEvaluation,
+                                   MetricAccumulator, stack_outputs,
+                                   unstack_outputs)
+from repro.data.generators import RandomTreeGenerator, bin_numeric
+from repro.data.pipeline import Chunk, ChunkedStream
+from repro.ml.amrules import AMRules, RulesConfig
+from repro.ml.clustream import CluStream, CluStreamConfig
+from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
+from repro.ml.htree import TreeConfig
+from repro.ml.vht import VHT, VHTConfig, build_vht_topology
+
+B = 64          # micro-batch size (small: every draw compiles a scan)
+T_MAX = 9       # longest stream the property test slices from
+
+# loose Hoeffding bound so trees actually split within the short stream
+# (splits crossing chunk boundaries are the interesting case)
+TC = TreeConfig(n_attrs=12, n_bins=8, n_classes=2, max_nodes=63, n_min=20,
+                delta=0.05, tau=0.1)
+RC = RulesConfig(n_attrs=12, n_bins=8, max_rules=16, n_min=100)
+CC = CluStreamConfig(n_dims=12, n_micro=16, n_macro=3, period=2 * B)
+
+
+def _make_stream():
+    gen = RandomTreeGenerator(n_cat=6, n_num=6, depth=5, seed=3)
+    key = jax.random.PRNGKey(0)
+    xs, ys = [], []
+    for _ in range(T_MAX):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, B)
+        xs.append(bin_numeric(x, 8))
+        ys.append(y)
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+XS, YS = _make_stream()
+
+
+def _payload(family, t):
+    if family == "clustream":
+        return {"x": XS[:t].astype(jnp.float32)}
+    if family == "amrules":
+        return {"x": XS[:t], "y": YS[:t].astype(jnp.float32)}
+    return {"x": XS[:t], "y": YS[:t]}
+
+
+# ONE learner + engine per family, reused across every (T, C) combination:
+# the engines' compiled-program caches are keyed on the wrapped topology,
+# and jit re-specializes per chunk shape, so repeated shapes cost nothing.
+LEARNERS = {
+    "vht": VHT(VHTConfig(TC)),
+    "ozabag": OzaEnsemble(EnsembleConfig(tree=TC, n_members=3)),
+    "amrules": AMRules(RC),
+    "clustream": CluStream(CC),
+}
+ENGINES = {name: (JitEngine(), JitEngine()) for name in LEARNERS}
+_MONO_CACHE: dict = {}
+
+
+def _assert_trees_identical(a, b):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for (path, x), y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(path))
+
+
+def _monolithic(family, t):
+    """Reference: the whole-stream scan (cached per family and length)."""
+    if (family, t) not in _MONO_CACHE:
+        eng, _ = ENGINES[family]
+        learner = LEARNERS[family]
+        carry = eng.init(learner, jax.random.PRNGKey(0))
+        _MONO_CACHE[(family, t)] = eng.run_stream(learner, carry,
+                                                  _payload(family, t))
+    return _MONO_CACHE[(family, t)]
+
+
+def _chunked(family, t, c, **kw):
+    _, eng = ENGINES[family]
+    learner = LEARNERS[family]
+    carry = eng.init(learner, jax.random.PRNGKey(0))
+    return eng.run_stream(learner, carry, _payload(family, t),
+                          chunk_len=c, **kw)
+
+
+# -------------------- chunked == monolithic, all four families -------------
+
+@pytest.mark.parametrize("family", list(LEARNERS))
+@pytest.mark.parametrize("t,c", [(8, 3),   # T % C != 0: padded tail
+                                 (2, 5),   # T < C: one mostly-padded chunk
+                                 (4, 1),   # C == 1: every chunk one step
+                                 (6, 3)])  # T % C == 0: no padding at all
+def test_chunked_bit_identical_to_monolithic(family, t, c):
+    """The tentpole acceptance: driving the scanned step chunk by chunk --
+    masked no-op padding, primed first chunk, per-chunk dispatch -- changes
+    not a single bit of the final carry OR the per-step outputs."""
+    c0, o0 = _monolithic(family, t)
+    c1, o1 = _chunked(family, t, c)
+    _assert_trees_identical(c0, c1)
+    _assert_trees_identical(o0, o1)
+    assert jax.tree.leaves(o1)[0].shape[0] == t   # padding trimmed
+
+
+def test_chunked_vht_feedback_actually_fires():
+    """The VHT feedback loop (split decisions) crosses chunk boundaries:
+    the learned tree must actually grow for the parity above to mean
+    anything, and the chunked topology run must match the monolithic
+    topology run through the whole MA/LS graph."""
+    topo = build_vht_topology(VHTConfig(TC))
+    xs, ys = XS, YS
+    eng = JitEngine()
+    c0 = eng.init(topo, jax.random.PRNGKey(0))
+    c0, o0 = eng.run_stream(topo, c0, {"x": xs, "y": ys})
+    assert int(c0["states"]["model-aggregator"]["n_nodes"]) > 1
+    eng2 = JitEngine()
+    c1 = eng2.init(topo, jax.random.PRNGKey(0))
+    c1, o1 = eng2.run_stream(topo, c1, {"x": xs, "y": ys}, chunk_len=4)
+    _assert_trees_identical(c0, c1)
+    _assert_trees_identical(o0, o1)
+
+
+def test_chunked_accepts_prebuilt_stream_and_reports_chunks():
+    stream = ChunkedStream(_payload("vht", 7), 3)
+    assert stream.n_chunks == 3 and stream.n_steps == 7
+    seen = []
+    c1, o1 = _chunked("vht", 7, 3,
+                      on_chunk=lambda outs, ch, carry: seen.append(
+                          (ch.index, ch.length, ch.padded)))
+    assert seen == [(0, 3, False), (1, 3, False), (2, 1, True)]
+    c0, o0 = _monolithic("vht", 7)
+    _assert_trees_identical(c0, c1)
+
+
+def test_chunked_collect_outputs_false_returns_none():
+    """Long-stream mode: outputs are dropped after the on_chunk reduction
+    instead of concatenating a [T, ...] pytree."""
+    tally = MetricAccumulator()
+    carry, outs = _chunked("amrules", 8, 3, collect_outputs=False,
+                           on_chunk=lambda o, ch, c: tally.update(
+                               o["metrics"]))
+    assert outs is None
+    assert tally.seen == 8 * B
+    c0, o0 = _monolithic("amrules", 8)
+    _assert_trees_identical(c0, carry)
+    # the streamed reduction equals the monolithic one
+    mono = MetricAccumulator()
+    mono.update(o0["metrics"])
+    assert tally.abs_err == mono.abs_err and tally.curve == mono.curve
+
+
+# -------------------- hypothesis: random lengths and chunk sizes -----------
+
+try:
+    from hypothesis import example, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(family=st.sampled_from(sorted(LEARNERS)),
+           t=st.integers(1, T_MAX), c=st.integers(1, 6))
+    @example(family="vht", t=8, c=3)        # padded tail
+    @example(family="clustream", t=2, c=5)  # T < C
+    @example(family="ozabag", t=4, c=1)     # C == 1
+    @example(family="amrules", t=1, c=4)    # single-step stream
+    @settings(max_examples=10, deadline=None)
+    def test_chunked_property_bit_identical(family, t, c):
+        """Chunked == monolithic bit-for-bit over random stream lengths
+        and chunk sizes, for every learner family."""
+        c0, o0 = _monolithic(family, t)
+        c1, o1 = _chunked(family, t, c)
+        _assert_trees_identical(c0, c1)
+        _assert_trees_identical(o0, o1)
+
+
+# -------------------- ChunkedStream source ---------------------------------
+
+def test_chunked_stream_pads_and_masks_tail():
+    stream = ChunkedStream({"x": jnp.arange(10.0)}, 4, to_device=False)
+    chunks = list(stream)
+    assert [c.length for c in chunks] == [4, 4, 2]
+    tail = chunks[-1]
+    assert tail.chunk_len == 4 and tail.padded
+    np.testing.assert_array_equal(np.asarray(tail.valid),
+                                  [True, True, False, False])
+    np.testing.assert_array_equal(np.asarray(tail.payload["x"]),
+                                  [8.0, 9.0, 0.0, 0.0])
+
+
+def test_chunked_stream_from_fn_generates_on_demand():
+    """The unbounded-stream path: chunks come from a fetch function, the
+    stream is restartable, and starting_at() resumes mid-stream."""
+    calls = []
+
+    def fetch(i):
+        calls.append(i)
+        return {"x": jnp.full((3,), float(i))}
+
+    stream = ChunkedStream.from_fn(fetch, n_chunks=4, chunk_len=3)
+    assert len(stream) == 4
+    got = [float(c.payload["x"][0]) for c in stream]
+    assert got == [0.0, 1.0, 2.0, 3.0]
+    got2 = [c.index for c in stream]          # restartable
+    assert got2 == [0, 1, 2, 3]
+    resumed = stream.starting_at(2)
+    assert [c.index for c in resumed] == [2, 3]
+    assert len(resumed) == 2
+
+
+def test_chunked_stream_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        ChunkedStream({"x": jnp.arange(4.0)}, 0)
+    with pytest.raises(ValueError):
+        ChunkedStream({"x": jnp.arange(4.0)}, 2).starting_at(7)
+    over = ChunkedStream.from_fn(lambda i: {"x": jnp.zeros((5,))},
+                                 n_chunks=1, chunk_len=3)
+    with pytest.raises(ValueError):
+        list(over)                 # fetch returned more steps than chunk_len
+    empty = ChunkedStream.from_fn(lambda i: {"x": jnp.zeros((0,))},
+                                  n_chunks=1, chunk_len=3)
+    with pytest.raises(ValueError):
+        list(empty)                # an all-padding chunk would train on
+                                   # fabricated zeros via the priming step
+
+
+def test_chunked_stream_accepts_payload_list():
+    stream = ChunkedStream([{"x": jnp.full((2,), float(i))}
+                            for i in range(5)], 2, to_device=False)
+    assert stream.n_steps == 5 and stream.n_chunks == 3
+    first = next(iter(stream))
+    assert first.payload["x"].shape == (2, 2)
+
+
+# -------------------- output normalization helper --------------------------
+
+def test_stack_outputs_normalizes_local_engine_lists():
+    """The LocalEngine list-of-dicts and the scanned engines' stacked
+    pytree are the same data through the shared helper -- no hand-rolled
+    conversion in parity tests."""
+    amr = LEARNERS["amrules"]
+    loc = LocalEngine()
+    states = loc.init(amr, jax.random.PRNGKey(0))
+    states, outs = loc.run_stream(amr, states, _payload("amrules", 3))
+    assert isinstance(outs, list) and len(outs) == 3
+    stacked = stack_outputs(outs)
+    assert stacked["metrics"]["seen"].shape == (3,)
+    _assert_trees_identical(stacked, _monolithic("amrules", 3)[1])
+    back = unstack_outputs(stacked)
+    assert len(back) == 3
+    _assert_trees_identical(back[0], outs[0])
+    assert stack_outputs([]) == {} and unstack_outputs({}) == []
+    assert stack_outputs(stacked) is stacked        # already normalized
+
+
+def test_local_engine_runs_chunked_stream_with_boundaries():
+    """LocalEngine accepts a ChunkedStream: valid steps run eagerly and
+    boundary hooks fire between chunks -- the eager oracle for the
+    chunked drivers (exercised below for CluStream's boundary mode)."""
+    amr = LEARNERS["amrules"]
+    loc = LocalEngine()
+    states = loc.init(amr, jax.random.PRNGKey(0))
+    states, outs = loc.run_stream(amr, states,
+                                  ChunkedStream(_payload("amrules", 5), 2))
+    assert isinstance(outs, list) and len(outs) == 5   # padding never runs
+
+
+# -------------------- CluStream macro hoist --------------------------------
+
+def test_clustream_boundary_mode_strips_macro_from_step_hlo():
+    """In boundary mode the scanned step must contain NO k-means: the sort
+    (top-k seed by weight) that anchors macro_cluster disappears from the
+    step program and moves to the boundary program."""
+    cs_step = CluStream(CC)
+    cs_bdry = CluStream(dataclasses.replace(CC, macro_impl="boundary"))
+    x = XS[0].astype(jnp.float32)
+
+    def hlo(fn, *args):
+        return jax.jit(fn).lower(*args).compile().as_text()
+
+    st = cs_step.init()
+    step_hlo = hlo(cs_step.step, st, x)
+    bdry_step_hlo = hlo(cs_bdry.step, cs_bdry.init(), x)
+    bdry_hlo = hlo(cs_bdry.boundary, cs_bdry.init())
+    assert "sort" in step_hlo          # step mode carries the k-means
+    assert "sort" not in bdry_step_hlo  # hoisted out of the hot loop
+    assert "sort" in bdry_hlo           # ... into the boundary phase
+
+
+def test_clustream_boundary_mode_matches_eager_oracle():
+    """The chunked run of boundary-mode CluStream equals the eager
+    LocalEngine chunk loop (steps + boundary hooks between chunks) --
+    same states, same metrics."""
+    cc = dataclasses.replace(CC, macro_impl="boundary", period=3 * B)
+    cs = CluStream(cc)
+    payload = {"x": XS[:7].astype(jnp.float32)}
+
+    eng = JitEngine()
+    carry = eng.init(cs, jax.random.PRNGKey(0))
+    carry, outs = eng.run_stream(cs, carry, payload, chunk_len=2)
+
+    loc = LocalEngine()
+    states = loc.init(cs, jax.random.PRNGKey(0))
+    states, louts = loc.run_stream(cs, states, ChunkedStream(payload, 2))
+    _assert_trees_identical(carry["states"], states)
+    _assert_trees_identical(outs, stack_outputs(louts))
+    # the macro phase actually fired mid-stream
+    assert float(states["clustream"]["macro_t"]) > 0
+
+
+def test_clustream_boundary_mode_equals_step_mode_when_aligned():
+    """With the macro period aligned to chunk_len * batch, the boundary
+    hook fires exactly where the in-step cond would have -- the final
+    state (CF + macro centroids + macro clock) is bit-identical."""
+    period = 2 * B                                     # chunk_len=2, batch=B
+    cs_step = CluStream(dataclasses.replace(CC, period=period))
+    cs_bdry = CluStream(dataclasses.replace(CC, period=period,
+                                            macro_impl="boundary"))
+    payload = {"x": XS[:8].astype(jnp.float32)}
+    e1 = JitEngine()
+    c1 = e1.init(cs_step, jax.random.PRNGKey(0))
+    c1, _ = e1.run_stream(cs_step, c1, payload)
+    e2 = JitEngine()
+    c2 = e2.init(cs_bdry, jax.random.PRNGKey(0))
+    c2, _ = e2.run_stream(cs_bdry, c2, payload, chunk_len=2)
+    assert float(c1["states"]["clustream"]["macro_t"]) > 0   # macro fired
+    _assert_trees_identical(c1["states"], c2["states"])
+
+
+def test_clustream_rejects_unknown_macro_impl():
+    with pytest.raises(ValueError):
+        CluStream(dataclasses.replace(CC, macro_impl="nope"))
+
+
+def test_boundary_hooks_refuse_non_chunked_drivers():
+    """A boundary-mode learner on a NON-chunked driver would silently
+    freeze its macro centroids at init forever -- every path that never
+    fires boundary hooks must fail loudly instead."""
+    cs = CluStream(dataclasses.replace(CC, macro_impl="boundary"))
+    payload = {"x": XS[:2].astype(jnp.float32)}
+    eng = JitEngine()
+    carry = eng.init(cs, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="boundary"):
+        eng.run_stream(cs, carry, payload)            # monolithic scan
+    with pytest.raises(ValueError, match="boundary"):
+        cs.run(cs.init(), payload["x"])               # learner's own scan
+    loc = LocalEngine()
+    states = loc.init(cs, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="boundary"):
+        loc.run_stream(cs, states, payload)           # eager non-chunked
+    # the chunked path accepts the same learner
+    carry2 = JitEngine().init(cs, jax.random.PRNGKey(0))
+    JitEngine().run_stream(cs, carry2, payload, chunk_len=2)
+
+
+def test_monolithic_run_stream_rejects_chunked_knobs():
+    """on_chunk / collect_outputs silently doing nothing on the monolithic
+    path would skip reductions and materialize [T, ...] -- reject them."""
+    amr = LEARNERS["amrules"]
+    eng = JitEngine()
+    carry = eng.init(amr, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="chunked"):
+        eng.run_stream(amr, carry, _payload("amrules", 2),
+                       on_chunk=lambda *a: None)
+    with pytest.raises(ValueError, match="chunked"):
+        eng.run_stream(amr, carry, _payload("amrules", 2),
+                       collect_outputs=False)
+
+
+def test_chunked_evaluation_rejects_engines_without_chunked_driver():
+    with pytest.raises(TypeError, match="chunked driver"):
+        ChunkedPrequentialEvaluation(
+            LEARNERS["amrules"], ChunkedStream(_payload("amrules", 2), 2),
+            engine=LocalEngine())
+
+
+def test_clustream_step_mode_exposes_no_boundary_hook():
+    """Step mode has no boundary-phase work, so the learner must not
+    advertise a hook -- the chunked driver's `boundary is None` fast path
+    keeps step-mode chunked runs free of per-chunk dispatch."""
+    from repro.core.topology import LearnerProcessor
+    assert LearnerProcessor(CluStream(CC)).boundary is None
+    bdry = CluStream(dataclasses.replace(CC, macro_impl="boundary"))
+    assert LearnerProcessor(bdry).boundary is not None
+
+
+# -------------------- checkpoint / kill / resume ---------------------------
+
+def test_restore_structured_round_trips_without_template(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": [jnp.float32(1.5), (jnp.arange(2), None)],
+            "z": {"nested": jnp.asarray(7, jnp.int64)
+                  if jax.config.jax_enable_x64 else jnp.asarray(7)}}
+    mgr.save(3, tree, blocking=True)
+    back, step = mgr.restore_structured()
+    assert step == 3
+    assert isinstance(back["b"], list) and isinstance(back["b"][1], tuple)
+    assert back["b"][1][1] is None
+    la = jax.tree_util.tree_flatten_with_path(tree)[0]
+    lb = jax.tree.leaves(back)
+    assert len(la) == len(lb)
+    for (path, x), y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(path))
+
+
+def test_restore_structured_refuses_unencodable_containers(tmp_path):
+    """Dict subclasses flatten in insertion order while the encoder sorts,
+    so structure encoding must refuse them (restore falls back to the
+    template-based path) instead of silently permuting leaves."""
+    import collections
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    tree = {"od": collections.OrderedDict(
+        [("b", jnp.ones(2)), ("a", jnp.zeros(3))])}
+    mgr.save(1, tree, blocking=True)
+    with pytest.raises(ValueError, match="no stored structure"):
+        mgr.restore_structured()
+    back, _ = mgr.restore(tree)           # template path still works
+    np.testing.assert_array_equal(np.asarray(back["od"]["a"]), np.zeros(3))
+
+
+def test_restore_structured_refuses_single_leaf_custom_nodes(tmp_path):
+    """A registered custom node holding exactly ONE leaf passes the leaf
+    count check while being encoded as a bare leaf; the treedef round-trip
+    must catch it and fall back (no silent unwrapping)."""
+
+    class Box:
+        def __init__(self, v):
+            self.v = v
+
+    jax.tree_util.register_pytree_node(
+        Box, lambda b: ((b.v,), None), lambda _, c: Box(c[0]))
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    tree = {"opt": Box(jnp.arange(3.0))}
+    mgr.save(1, tree, blocking=True)
+    with pytest.raises(ValueError, match="no stored structure"):
+        mgr.restore_structured()
+    back, _ = mgr.restore(tree)           # template path round-trips
+    np.testing.assert_array_equal(np.asarray(back["opt"].v),
+                                  np.arange(3.0))
+
+
+def test_chunked_kill_resume_bit_identical(tmp_path):
+    """A killed chunked run resumes mid-stream from its checkpoint (carry
+    + cursor + metric accumulator restored structurally, no template) and
+    finishes with EXACTLY the uninterrupted run's final carry, metric,
+    and prequential curve."""
+    vht = VHT(VHTConfig(TC))
+    stream = ChunkedStream(_payload("vht", 8), 3)
+
+    r0 = ChunkedPrequentialEvaluation(vht, stream).run()
+    assert int(r0.extra["carry"]["states"]["vht"]["n_nodes"]) > 1
+
+    mgr = CheckpointManager(tmp_path, keep=0, async_write=False)
+    full = ChunkedPrequentialEvaluation(vht, stream, checkpoint=mgr,
+                                        checkpoint_every=1)
+    r1 = full.run(resume=False)
+    assert r1.metric == r0.metric and r1.curve == r0.curve
+
+    # "kill" after chunk 1: drop every later checkpoint, resume from there
+    for s in mgr.all_steps():
+        if s > 1:
+            shutil.rmtree(pathlib.Path(tmp_path) / f"step_{s:010d}")
+    assert mgr.latest_step() == 1
+    resumed = ChunkedPrequentialEvaluation(
+        vht, stream, checkpoint=CheckpointManager(tmp_path, keep=0,
+                                                  async_write=False),
+        checkpoint_every=10 ** 9)
+    r2 = resumed.run(resume=True)
+    assert r2.metric == r0.metric
+    assert r2.curve == r0.curve
+    _assert_trees_identical(r0.extra["carry"], r2.extra["carry"])
+
+
+def test_metric_accumulator_state_round_trip():
+    acc = MetricAccumulator()
+    acc.update({"seen": jnp.full((3,), 4.0),
+                "correct": jnp.asarray([1.0, 2.0, 3.0])})
+    clone = MetricAccumulator().load(acc.state())
+    assert clone.metric == acc.metric and clone.curve == acc.curve
+    clone.update({"seen": jnp.ones((1,)), "abs_err": jnp.ones((1,))})
+    assert clone.seen == acc.seen + 1

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core.engines import JitEngine, LocalEngine
+from repro.core.evaluation import stack_outputs
 from repro.data.generators import (ElectricityLikeGenerator,
                                    RandomTreeGenerator, bin_numeric)
 from repro.kernels.rule_stats.ops import (rule_moments, rule_stats_update,
@@ -68,7 +69,7 @@ def test_jit_engine_run_stream_bit_identical_to_step_loop(dense_stream):
     for i in range(xs.shape[0]):
         carry, out = eng.step(topo, carry, {"x": xs[i], "y": ys[i]})
         outs.append(out)
-    stacked = jax.tree.map(lambda *z: jnp.stack(z), *outs)
+    stacked = stack_outputs(outs)
 
     eng2 = JitEngine()
     carry2 = eng2.init(topo, jax.random.PRNGKey(0))
@@ -114,7 +115,7 @@ def test_vht_scan_run_bit_identical_to_step_loop(dense_stream):
     for i in range(xs.shape[0]):
         st, m = step(st, xs[i], ys[i])
         ms.append(m)
-    ms = jax.tree.map(lambda *z: jnp.stack(z), *ms)
+    ms = stack_outputs(ms)
     st2, ms2 = jax.jit(vht.run)(vht.init(), xs, ys)
     _assert_trees_identical(st, st2)
     _assert_trees_identical(ms, ms2)
@@ -252,7 +253,7 @@ def test_amrules_scanned_bit_identical_to_step_loop(reg_stream, name, mk):
     for i in range(xs.shape[0]):
         st, m = step(st, xs[i], ys[i])
         ms.append(m)
-    ms = jax.tree.map(lambda *z: jnp.stack(z), *ms)
+    ms = stack_outputs(ms)
     st2, ms2 = jax.jit(learner.run)(learner.init(), xs, ys)
     _assert_trees_identical(st, st2)
     _assert_trees_identical(ms, ms2)
@@ -531,7 +532,7 @@ def test_jit_engine_scans_bare_learner_stream(reg_stream):
     for i in range(xs.shape[0]):
         st, m = step(st, xs[i], ys[i])
         ms.append(m)
-    ms = jax.tree.map(lambda *z: jnp.stack(z), *ms)
+    ms = stack_outputs(ms)
     _assert_trees_identical(carry["states"]["amrules"], st)
     _assert_trees_identical(outs["metrics"], ms)
 

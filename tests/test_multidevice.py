@@ -215,6 +215,97 @@ else:
         _assert_trees_identical(c0["states"], carry["states"])
         _assert_trees_identical(o0, outs)
 
+    # ------------------------------------- chunked runtime under the mesh
+
+    def _chunked_sharded_parity(learner, payload, state_key, leaf_names,
+                                n_rows, *, chunk_len, mesh_axis):
+        """Chunked sharded run == monolithic single-device run bit for
+        bit, with the carry asserted physically partitioned at EVERY
+        chunk boundary (not just before/after the stream)."""
+        mesh = make_stream_mesh(mesh_axis)
+        n = mesh.shape[mesh_axis]
+
+        base = JitEngine()
+        c0 = base.init(learner, jax.random.PRNGKey(0))
+        c0, o0 = base.run_stream(learner, c0, payload)
+
+        eng = ShardMapEngine(mesh)
+        carry = eng.init(learner, jax.random.PRNGKey(0))
+        boundaries = []
+
+        def on_chunk(outs, chunk, carry):
+            for path in leaf_names:
+                leaf = carry["states"][state_key]
+                for k in path:
+                    leaf = leaf[k]
+                _assert_partitioned(leaf, n, n_rows)
+            boundaries.append(chunk.index)
+
+        carry, outs = eng.run_stream(learner, carry, payload,
+                                     chunk_len=chunk_len, on_chunk=on_chunk)
+        n_steps = jax.tree.leaves(payload)[0].shape[0]
+        assert boundaries == list(range(-(-n_steps // chunk_len)))
+        assert n_steps % chunk_len != 0      # the padded tail ran masked
+        _assert_trees_identical(c0["states"], carry["states"])
+        _assert_trees_identical(o0, outs)
+        return carry
+
+    def test_vamr_chunked_sharded_bit_identical(reg_stream):
+        """Rules axis over 'model', driven chunk by chunk (padded tail
+        included): per-rule state stays partitioned across every chunk
+        boundary and the result equals the monolithic single-device
+        scan."""
+        xs, ys = reg_stream
+        carry = _chunked_sharded_parity(
+            VAMR(RC), {"x": xs, "y": ys}, "vamr", (("stats",), ("ph_m",)),
+            RC.max_rules, chunk_len=4, mesh_axis="model")
+        assert int(carry["states"]["vamr"]["n_created"]) > 0
+
+    def test_ozabag_chunked_sharded_bit_identical(cls_stream):
+        """Member axis over 'data', chunked: one tree per device across
+        chunk boundaries, bit-identical to the monolithic scan."""
+        xs, ys = cls_stream
+        ens = OzaEnsemble(EnsembleConfig(tree=ETC, n_members=N_DEVICES))
+        _chunked_sharded_parity(
+            ens, {"x": xs, "y": ys}, "ozaensemble", (("trees", "stats"),),
+            N_DEVICES, chunk_len=4, mesh_axis="data")
+
+    def test_clustream_chunked_sharded_bit_identical(blob_stream):
+        """Micro-cluster axis over 'model', chunked, with the in-step
+        macro phase firing mid-stream: CF state stays partitioned across
+        chunk boundaries and matches the single-device monolithic scan."""
+        carry = _chunked_sharded_parity(
+            CluStream(CC), {"x": blob_stream}, "clustream",
+            (("ls",), ("n",)), CC.n_micro, chunk_len=3, mesh_axis="model")
+        assert float(carry["states"]["clustream"]["t"]) > CC.period
+
+    def test_clustream_boundary_mode_sharded_matches_unsharded(blob_stream):
+        """The chunk-boundary macro hoist under the mesh: the boundary
+        hook's k-means (inputs gathered to replicated) leaves the carry
+        partitioned and the sharded chunked run equals the single-device
+        chunked run bit for bit."""
+        import dataclasses
+        cc = dataclasses.replace(CC, period=3 * 128,
+                                 macro_impl="boundary")
+        cs = CluStream(cc)
+        payload = {"x": blob_stream}
+        mesh = make_stream_mesh("model")
+        n = mesh.shape["model"]
+
+        base = JitEngine()
+        c0 = base.init(cs, jax.random.PRNGKey(0))
+        c0, o0 = base.run_stream(cs, c0, payload, chunk_len=3)
+
+        eng = ShardMapEngine(mesh)
+        carry = eng.init(cs, jax.random.PRNGKey(0))
+        carry, outs = eng.run_stream(
+            cs, carry, payload, chunk_len=3,
+            on_chunk=lambda _o, _c, cr: _assert_partitioned(
+                cr["states"]["clustream"]["ls"], n, CC.n_micro))
+        assert float(carry["states"]["clustream"]["macro_t"]) > 0
+        _assert_trees_identical(c0["states"], carry["states"])
+        _assert_trees_identical(o0, outs)
+
     # ------------------------------------------- merge under uneven load
 
     def test_clustream_merge_round_trips_under_uneven_shard_loads(
