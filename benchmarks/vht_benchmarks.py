@@ -233,11 +233,13 @@ def chunked_long_stream(fast=True):
                                    2, chunk_len), engine=eng).run()
     compile_s = time.perf_counter() - t0
 
+    kill_at = (3 * n_chunks) // 5        # mid-stream death point
+    restore_from = n_chunks // 2         # newest checkpoint surviving it
     with tempfile.TemporaryDirectory() as ckdir:
         mgr = CheckpointManager(ckdir, keep=0)
         res = ChunkedPrequentialEvaluation(
             vht, stream, engine=eng, checkpoint=mgr,
-            checkpoint_every=n_chunks // 2,
+            checkpoint_every=n_chunks // 4,
             on_chunk=sample_live).run(resume=False)
         if live_max[0] >= ceiling:
             raise RuntimeError(
@@ -245,21 +247,35 @@ def chunked_long_stream(fast=True):
                 f">= ceiling {ceiling} (1/10th of the {mono_bytes}-byte "
                 "monolithic stream): the runtime is materializing more "
                 "than the chunk window")
-        # simulate the kill: drop every checkpoint after the midpoint,
-        # then resume the second half from what survives
+        # simulate the kill at chunk `kill_at`: every checkpoint the dead
+        # process would not have survived is dropped, then a FRESH engine
+        # (cold caches -- recovery pays the recompile like a real restart)
+        # resumes from what is left on disk
         import pathlib
         import shutil
         for s in mgr.all_steps():
-            if s > n_chunks // 2:
+            if s > restore_from:
                 shutil.rmtree(pathlib.Path(ckdir) / f"step_{s:010d}")
+        marks = {}
+
+        def mark(outs, chunk, carry):
+            jax.block_until_ready(jax.tree.leaves(carry)[0])
+            marks[chunk.index] = time.perf_counter()
+
+        resume_t0 = time.perf_counter()
         resumed = ChunkedPrequentialEvaluation(
-            vht, stream, engine=eng,
+            vht, stream, engine=JitEngine(),
             checkpoint=CheckpointManager(ckdir, keep=0),
-            checkpoint_every=10 ** 9).run(resume=True)
+            checkpoint_every=10 ** 9, on_chunk=mark).run(resume=True)
     resume_exact = (resumed.metric == res.metric
                     and resumed.curve == res.curve)
-
+    # time-to-recover decomposition: restore+recompile+first replayed
+    # chunk, catch-up through the kill point (the genuinely lost work),
+    # and the full resumed tail
     dt = res.extra["wall_s"]
+    t_first = marks[restore_from] - resume_t0
+    t_recover = marks[kill_at] - resume_t0
+    steady_per_chunk = dt / n_chunks
     largest_mono = max(v["n_batches"] for k, v in BENCH.items()
                        if not k.startswith("chunked.")) if BENCH else 0
     BENCH[f"chunked.vht-dense200-c{chunk_len}"] = {
@@ -282,6 +298,32 @@ def chunked_long_stream(fast=True):
          f"steps={n_steps};thr={res.throughput:.0f}/s;acc={res.metric:.3f};"
          f"resident={live_max[0]/2**20:.0f}MiB;"
          f"monolithic={mono_bytes/2**20:.0f}MiB;compile={compile_s:.1f}s;"
+         f"resume_exact={resume_exact}")
+
+    # recovery arm: how long a mid-stream death actually costs.  t_first
+    # is restore + recompile + the first replayed chunk; t_recover adds
+    # the catch-up replay through the kill point (the work the dead
+    # process genuinely lost); steady_per_chunk is the uninterrupted
+    # run's per-chunk wall time for comparison.
+    replayed = kill_at - restore_from + 1
+    BENCH[f"recovery.vht-dense200-c{chunk_len}"] = {
+        "killed_at_chunk": int(kill_at),
+        "restored_from_chunk": int(restore_from),
+        "replayed_chunks_to_kill_point": int(replayed),
+        "time_to_first_replayed_chunk_s": t_first,
+        "time_to_recover_s": t_recover,
+        "steady_state_chunk_s": steady_per_chunk,
+        "recovery_overhead_x": t_recover / (replayed * steady_per_chunk),
+        "resumed_tail_s": resumed.extra["wall_s"],
+        "resume_exact": bool(resume_exact),
+        "path": "drop post-kill checkpoints, fresh engine (cold caches), "
+                "restore newest intact checkpoint, replay to kill point",
+    }
+    emit(f"recovery.vht-dense200-c{chunk_len}", t_recover,
+         f"killed_at={kill_at};restored_from={restore_from};"
+         f"replayed={replayed};t_first={t_first:.2f}s;"
+         f"t_recover={t_recover:.2f}s;"
+         f"steady={steady_per_chunk*1e3:.0f}ms/chunk;"
          f"resume_exact={resume_exact}")
     if not resume_exact:
         raise RuntimeError("checkpoint resume did not reproduce the "

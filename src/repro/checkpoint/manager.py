@@ -24,15 +24,19 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import os
 import shutil
 import threading
 import time
+import zipfile
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+logger = logging.getLogger("repro.checkpoint")
 
 
 def _flatten(tree):
@@ -208,6 +212,37 @@ class CheckpointManager:
         data = np.load(d / "tensors.npz")
         return step, manifest, data
 
+    def _candidate_steps(self, step: int | None):
+        """Steps to try, newest first.  A pinned step is tried alone (the
+        caller asked for that exact version); ``step=None`` yields every
+        on-disk step so a corrupted latest falls back to older intact ones."""
+        self.wait()
+        if step is not None:
+            return [step]
+        steps = list(reversed(self.all_steps()))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return steps
+
+    def _restore_with_fallback(self, step: int | None, attempt):
+        """Run ``attempt(s)`` on candidate steps newest-first, falling back
+        past corrupted/unreadable checkpoints.  The error raised when NO
+        candidate is intact is the NEWEST step's error (unwrapped), so a
+        single-checkpoint corruption keeps its original exception type."""
+        first_err = None
+        for s in self._candidate_steps(step):
+            try:
+                return attempt(s)
+            except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+                if step is not None:
+                    raise
+                if first_err is None:
+                    first_err = e
+                logger.warning(
+                    "checkpoint step_%010d unusable (%s: %s); falling back "
+                    "to the newest intact checkpoint", s, type(e).__name__, e)
+        raise first_err
+
     def _load_leaf(self, data, manifest, i: int, *, verify: bool):
         a = data[f"t{i}"]
         meta = manifest["tensors"][i]
@@ -228,8 +263,14 @@ class CheckpointManager:
         as host numpy arrays (bit-exact).  This is the mid-stream resume
         path -- a fresh process does not know the engine carry's feedback
         structure, the chunk cursor, or the metric accumulator shape, so
-        the checkpoint itself must carry the structure.  Returns
-        (tree, step)."""
+        the checkpoint itself must carry the structure.  With ``step=None``
+        a corrupted/truncated latest checkpoint is skipped (with a warning)
+        in favor of the newest intact one; raises only when none is intact.
+        Returns (tree, step)."""
+        return self._restore_with_fallback(
+            step, lambda s: self._restore_structured_at(s, verify=verify))
+
+    def _restore_structured_at(self, step: int, *, verify: bool):
         step, manifest, data = self._load_step(step)
         structure = manifest.get("structure")
         if structure is None:
@@ -248,7 +289,17 @@ class CheckpointManager:
         shardings: optional matching pytree of NamedSharding -- enables
         elastic restore onto a different mesh than the checkpoint was
         written from.
+
+        With ``step=None`` a corrupted latest checkpoint (checksum mismatch,
+        truncated npz, missing manifest) falls back to the newest intact
+        one; only raises when no intact checkpoint exists.
         """
+        return self._restore_with_fallback(
+            step, lambda s: self._restore_at(tree_like, s,
+                                             shardings=shardings,
+                                             verify=verify))
+
+    def _restore_at(self, tree_like, step: int, *, shardings, verify):
         step, manifest, data = self._load_step(step)
         leaves, treedef = _flatten(tree_like)
         if len(leaves) != manifest["n_tensors"]:

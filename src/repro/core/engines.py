@@ -113,6 +113,17 @@ def _require_no_boundaries(topology: Topology):
             "e.g. CluStream macro_impl='step')")
 
 
+def _close_iter(it):
+    """Release a chunk iterator deterministically: a ``ChunkedStream``
+    iterator owns a producer thread whose shutdown is its generator
+    ``finally`` -- on an abandoned iteration (a raising ``on_chunk``, a
+    kill injected mid-stream) relying on GC would leak the thread and pin
+    its prefetched device buffers until collection."""
+    close = getattr(it, "close", None)
+    if close is not None:
+        close()
+
+
 def _concat_outputs(segments):
     """The ONE output-stacking path: a list of output pytrees, each stacked
     on a leading step axis, becomes a single stacked pytree.  Both the
@@ -152,12 +163,17 @@ class LocalEngine(Engine):
         topology = self._as_topology(topology)
         outs = []
         if isinstance(payloads, ChunkedStream):
-            for chunk in payloads:
-                live = jax.tree.map(lambda x: x[:chunk.length], chunk.payload)
-                for payload in _unstack_payloads(live):
-                    states, out = self.step(topology, states, payload)
-                    outs.append(out)
-                states = self._apply_boundaries(topology, states)
+            it = iter(payloads)
+            try:
+                for chunk in it:
+                    live = jax.tree.map(lambda x: x[:chunk.length],
+                                        chunk.payload)
+                    for payload in _unstack_payloads(live):
+                        states, out = self.step(topology, states, payload)
+                        outs.append(out)
+                    states = self._apply_boundaries(topology, states)
+            finally:
+                _close_iter(it)
             return states, outs
         _require_no_boundaries(topology)
         for payload in _unstack_payloads(payloads):
@@ -448,15 +464,19 @@ class JitEngine(Engine):
         topology = self._as_topology(topology)
         boundary = self._boundary_fn(topology)
         segments = []
-        for chunk in chunks:
-            carry, outs = self._run_chunk(topology, carry, chunk)
-            if boundary is not None:
-                with self._mesh_ctx():
-                    carry = boundary(carry)
-            if on_chunk is not None:
-                on_chunk(outs, chunk, carry)
-            if collect_outputs:
-                segments.append(outs)
+        it = iter(chunks)
+        try:
+            for chunk in it:
+                carry, outs = self._run_chunk(topology, carry, chunk)
+                if boundary is not None:
+                    with self._mesh_ctx():
+                        carry = boundary(carry)
+                if on_chunk is not None:
+                    on_chunk(outs, chunk, carry)
+                if collect_outputs:
+                    segments.append(outs)
+        finally:
+            _close_iter(it)
         return carry, _concat_outputs(segments) if collect_outputs else None
 
     def _run_chunk(self, topology: Topology, carry, chunk: Chunk):

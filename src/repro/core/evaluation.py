@@ -149,7 +149,7 @@ class MetricAccumulator:
 class ChunkedPrequentialEvaluation(Task):
     """Prequential task on the chunked stream runtime.
 
-    Drives ``engine.run_stream`` over a ``ChunkedStream``: metrics reduce
+    Drives the engine's chunked scan one chunk at a time: metrics reduce
     per chunk through a ``MetricAccumulator`` (prequential curves stream
     to host incrementally; no ``[T, ...]`` output pytree is ever
     materialized), and an optional ``CheckpointManager`` snapshots the
@@ -158,11 +158,44 @@ class ChunkedPrequentialEvaluation(Task):
     ``checkpoint_every`` chunks.  ``run(resume=True)`` picks up a killed
     run mid-stream bit-identically: the resumed run's final carry and
     metrics equal the uninterrupted run's.
+
+    Fault tolerance (all optional, zero overhead when off):
+
+      * ``supervisor`` + ``host``: a per-chunk heartbeat (with the chunk's
+        wall duration) feeds the ``Supervisor`` ledger, so dead-host and
+        straggler detection run at chunk-boundary granularity.
+      * elastic re-place: when the supervisor reports newly DEAD hosts at
+        a chunk boundary and a ``remesh`` factory was given, the run
+        snapshots its state, asks ``Supervisor.propose_mesh(chips_per_host,
+        model_parallel)`` for the survivor mesh, builds a fresh engine via
+        ``remesh(shape, axes)``, and re-enters the stream from the same
+        cursor through ``restore_structured`` + ``place_carry`` -- the
+        shrunken-mesh continuation is bit-identical to the uninterrupted
+        run (the sharded==unsharded guarantee).
+      * ``injector`` (``repro.runtime.chaos.FaultInjector``): kill /
+        poison hooks fire at their scheduled chunks.
+      * finite-check + rollback: ``check_finite`` (default: on whenever a
+        checkpoint or injector is present) scans the carry for non-finite
+        leaves after every chunk; on detection the run rolls back to the
+        last checkpoint (or the pristine init) and, per ``poison_policy``,
+        retries the poison chunk up to ``max_poison_retries`` times before
+        skipping it.  Every decision lands in the run report
+        (``result.extra["report"]``).
+
+    The driving loop runs each chunk through its own
+    ``engine.run_stream_chunked`` call -- same priming, same masked scan
+    program, same boundary-hook ordering as one fused call (the compiled
+    chunk executables are cached per topology), so chunk-at-a-time
+    control flow costs nothing and makes rollback/re-place possible.
     """
 
     def __init__(self, learner, stream, *, engine=None,
                  checkpoint=None, checkpoint_every: int = 1, key=None,
-                 on_chunk=None):
+                 on_chunk=None, supervisor=None, host="host0",
+                 injector=None, check_finite: bool | None = None,
+                 poison_policy: str = "retry", max_poison_retries: int = 1,
+                 remesh=None, chips_per_host: int = 1,
+                 model_parallel: int = 1):
         from repro.core.engines import JitEngine
         self.learner = learner
         self.stream = stream
@@ -178,6 +211,18 @@ class ChunkedPrequentialEvaluation(Task):
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.on_chunk = on_chunk     # optional extra per-chunk callback,
                                      # chained after the metric reduction
+        self.supervisor = supervisor
+        self.host = host
+        self.injector = injector
+        self.check_finite = check_finite
+        if poison_policy not in ("retry", "skip"):
+            raise ValueError(f"unknown poison_policy {poison_policy!r}")
+        self.poison_policy = poison_policy
+        self.max_poison_retries = max(0, int(max_poison_retries))
+        self.remesh = remesh         # (shape, axes) -> engine factory
+        self.chips_per_host = int(chips_per_host)
+        self.model_parallel = int(model_parallel)
+        self.report: dict = {}
 
     def _save(self, chunk_index: int, carry, acc: MetricAccumulator):
         cursor = chunk_index + 1          # next chunk to run
@@ -188,47 +233,173 @@ class ChunkedPrequentialEvaluation(Task):
             "metrics": acc.state(),
         })
 
+    def _restore(self):
+        """(carry, cursor, acc) from the newest intact checkpoint, placed
+        onto the current engine; None when nothing is on disk."""
+        if self.checkpoint is None or self.checkpoint.latest_step() is None:
+            return None
+        blob, _ = self.checkpoint.restore_structured()
+        carry = blob["carry"]
+        place = getattr(self.engine, "place_carry", None)
+        if place is not None:
+            carry = place(self.learner, carry)
+        self.key = jnp.asarray(blob["key"])
+        acc = MetricAccumulator().load(blob["metrics"])
+        return carry, int(blob["cursor"]), acc
+
+    def _dead_hosts(self) -> set:
+        if self.supervisor is None:
+            return set()
+        from repro.runtime.supervisor import HostStatus
+        return {h for h, st in self.supervisor.hosts.items()
+                if st.status is HostStatus.DEAD}
+
+    def _rollback(self, poison_chunk: int, skip: set, retries: dict,
+                  report: dict, key0):
+        """Non-finite carry after `poison_chunk`: decide retry-vs-skip,
+        then roll back to the last checkpoint (or the pristine initial
+        state when none exists).  Returns (carry, cursor, acc)."""
+        n = retries.get(poison_chunk, 0)
+        if self.poison_policy == "retry" and n < self.max_poison_retries:
+            retries[poison_chunk] = n + 1
+            decision = "retry"
+        else:
+            skip.add(poison_chunk)
+            report["skipped_chunks"].append(poison_chunk)
+            decision = "skip"
+        restored = self._restore()
+        if restored is not None:
+            carry, cursor, acc = restored
+        else:
+            self.key = key0
+            carry = self.engine.init(self.learner, key0)
+            cursor = self.stream.start_chunk
+            acc = MetricAccumulator()
+        report["rollbacks"] += 1
+        report["events"].append(
+            ("poison", poison_chunk, decision, cursor))
+        return carry, cursor, acc
+
+    def _elastic_replace(self, cursor: int, carry, acc, report: dict,
+                         newly_dead: set):
+        """Host loss at a chunk boundary: snapshot, shrink the mesh to the
+        survivors (``propose_mesh``), rebuild the engine, and re-place the
+        carry.  Metric/curve state lives on host already; only the carry
+        crosses meshes (through the mesh-independent checkpoint)."""
+        report["events"].append(("host_lost", tuple(sorted(newly_dead)),
+                                 cursor))
+        if self.remesh is None:
+            return carry           # detection only; nothing to rebuild
+        shape, axes = self.supervisor.propose_mesh(
+            self.chips_per_host, model_parallel=self.model_parallel)
+        if self.checkpoint is not None:
+            # blocking snapshot: the re-place round-trips through the
+            # checkpoint exactly like a real restart would
+            self._save(cursor - 1, carry, acc)
+            self.checkpoint.wait()
+            self.engine = self.remesh(shape, axes)
+            restored = self._restore()
+            carry = restored[0]
+        else:
+            host_carry = jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), carry)
+            self.engine = self.remesh(shape, axes)
+            carry = host_carry
+            place = getattr(self.engine, "place_carry", None)
+            if place is not None:
+                carry = place(self.learner, carry)
+        report["remeshes"] += 1
+        report["events"].append(
+            ("remesh", tuple(shape), tuple(axes), cursor))
+        return carry
+
     def run(self, *, resume: bool = True) -> PrequentialResult:
-        engine, learner = self.engine, self.learner
+        learner = self.learner
+        report = {"events": [], "skipped_chunks": [], "rollbacks": 0,
+                  "remeshes": 0, "heartbeats": 0, "source_retries": []}
+        self.report = report
         acc = MetricAccumulator()
         carry = None
         start = self.stream.start_chunk
-        if resume and self.checkpoint is not None \
-                and self.checkpoint.latest_step() is not None:
-            blob, _ = self.checkpoint.restore_structured()
-            carry = blob["carry"]
-            place = getattr(engine, "place_carry", None)
-            if place is not None:
-                carry = place(learner, carry)
-            start = int(blob["cursor"])
-            self.key = jnp.asarray(blob["key"])
-            acc.load(blob["metrics"])
+        key0 = self.key
+        if resume:
+            restored = self._restore()
+            if restored is not None:
+                carry, start, acc = restored
+                report["events"].append(("resume", start))
         if carry is None:
-            carry = engine.init(learner, self.key)
-        stream = self.stream.starting_at(start)
+            carry = self.engine.init(learner, self.key)
         seen0 = acc.seen          # restored instances: not processed now
+
+        check = self.check_finite
+        if check is None:       # default: on iff recovery can act on it
+            check = self.checkpoint is not None or self.injector is not None
+        from repro.runtime.chaos import carry_all_finite
 
         every = self.checkpoint_every
         # throughput excludes the first chunk (where the chunk programs
         # compile), mirroring PrequentialEvaluation's compile exclusion;
         # timed[...] = (t after first chunk, instances seen by then)
         timed: list = []
-
-        def on_chunk(outs, chunk, carry):
-            acc.update(outs["metrics"])
-            if not timed:
-                jax.block_until_ready(jax.tree.leaves(carry)[0])
-                timed.append((time.perf_counter(), acc.seen))
-            if self.checkpoint is not None \
-                    and (chunk.index + 1) % every == 0:
-                self._save(chunk.index, carry, acc)
-            if self.on_chunk is not None:
-                self.on_chunk(outs, chunk, carry)
+        skip: set[int] = set()
+        retries: dict[int, int] = {}
+        known_dead = self._dead_hosts()
+        end = self.stream.n_chunks
+        cursor = start
 
         t0 = time.perf_counter()
-        carry, _ = engine.run_stream(learner, carry, stream,
-                                     on_chunk=on_chunk,
-                                     collect_outputs=False)
+        while cursor < end:
+            poisoned_at = None
+            it = iter(self.stream.starting_at(cursor))
+            try:
+                for chunk in it:
+                    if chunk.index in skip:
+                        report["events"].append(("skip", chunk.index))
+                        cursor = chunk.index + 1
+                        continue
+                    tc = time.perf_counter()
+                    carry, outs = self.engine.run_stream_chunked(
+                        learner, carry, [chunk])
+                    if self.injector is not None:
+                        # models "this chunk's compute blew up": the NaN
+                        # lands in the post-chunk carry, where the boundary
+                        # finite-check must catch it
+                        carry = self.injector.maybe_poison(chunk.index,
+                                                           carry)
+                    if check and not carry_all_finite(carry):
+                        poisoned_at = chunk.index
+                        break
+                    if self.injector is not None:
+                        self.injector.maybe_kill(chunk.index)
+                    acc.update(outs["metrics"])
+                    if not timed:
+                        jax.block_until_ready(jax.tree.leaves(carry)[0])
+                        timed.append((time.perf_counter(), acc.seen))
+                    if self.checkpoint is not None \
+                            and (chunk.index + 1) % every == 0:
+                        self._save(chunk.index, carry, acc)
+                    if self.on_chunk is not None:
+                        self.on_chunk(outs, chunk, carry)
+                    cursor = chunk.index + 1
+                    if self.supervisor is not None:
+                        self.supervisor.heartbeat(
+                            self.host, chunk.index,
+                            time.perf_counter() - tc)
+                        report["heartbeats"] += 1
+                        newly_dead = self._dead_hosts() - known_dead
+                        if newly_dead:
+                            known_dead |= newly_dead
+                            carry = self._elastic_replace(
+                                cursor, carry, acc, report, newly_dead)
+                            break   # re-enter from cursor on the new mesh
+            finally:
+                close = getattr(it, "close", None)
+                if close is not None:
+                    close()   # unblock the producer thread deterministically
+            if poisoned_at is not None:
+                carry, cursor, acc = self._rollback(
+                    poisoned_at, skip, retries, report, key0)
+
         jax.block_until_ready(jax.tree.leaves(carry)[0])
         t_end = time.perf_counter()
         wall = max(t_end - t0, 1e-9)
@@ -238,7 +409,10 @@ class ChunkedPrequentialEvaluation(Task):
             thr = (acc.seen - timed[0][1]) / max(t_end - timed[0][0], 1e-9)
         if self.checkpoint is not None:
             self.checkpoint.wait()
+        report["source_retries"] = list(
+            getattr(self.stream, "retry_events", []))
         return PrequentialResult(
             metric=acc.metric, throughput=thr, curve=acc.curve,
             extra={"carry": carry, "seen": acc.seen,
-                   "chunks": len(stream), "wall_s": wall})
+                   "chunks": end - start, "wall_s": wall,
+                   "report": report})

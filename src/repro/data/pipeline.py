@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Any, Callable
 
 import jax
@@ -75,6 +76,26 @@ class StreamPipeline:
             xs.append(x)
             ys.append(y)
         return jnp.stack(xs), jnp.stack(ys)
+
+
+class TransientSourceError(RuntimeError):
+    """A retryable stream-source failure (the streaming analogue of a
+    dropped connection or a throttled broker): ``ChunkedStream`` retries
+    the fetch with capped exponential backoff before declaring the chunk
+    lost."""
+
+
+class StreamSourceError(RuntimeError):
+    """A chunk could not be produced: the transient-retry budget ran out.
+    Carries the failing chunk index so the operator knows exactly where
+    in the stream ingestion died."""
+
+    def __init__(self, chunk_index: int, attempts: int, cause):
+        super().__init__(
+            f"stream source failed on chunk {chunk_index} after "
+            f"{attempts} attempt{'s' if attempts != 1 else ''}: {cause!r}")
+        self.chunk_index = int(chunk_index)
+        self.attempts = int(attempts)
 
 
 @dataclasses.dataclass
@@ -151,7 +172,10 @@ class ChunkedStream:
                  fetch: Callable[[int], Any] | None = None,
                  n_chunks: int | None = None, n_steps: int | None = None,
                  start_chunk: int = 0, prefetch: int = 2, sharding=None,
-                 to_device: bool = True):
+                 to_device: bool = True, retries: int = 3,
+                 backoff: float = 0.05, backoff_cap: float = 5.0,
+                 transient: tuple = (TransientSourceError, ConnectionError,
+                                     TimeoutError)):
         if chunk_len < 1:
             raise ValueError(f"chunk_len must be >= 1, got {chunk_len}")
         self.chunk_len = int(chunk_len)
@@ -159,6 +183,13 @@ class ChunkedStream:
         self.prefetch = prefetch
         self.sharding = sharding
         self.to_device = to_device
+        self.retries = max(0, int(retries))
+        self.backoff = float(backoff)
+        self.backoff_cap = float(backoff_cap)
+        self.transient = tuple(transient)
+        # (chunk, attempt, slept_s, error) per retried fetch -- run reports
+        # surface these so silent source flakiness stays visible
+        self.retry_events: list[tuple] = []
         if fetch is not None:
             if n_chunks is None:
                 raise ValueError("from_fn streams need n_chunks")
@@ -198,6 +229,29 @@ class ChunkedStream:
         out.start_chunk = int(chunk)
         return out
 
+    def _fetch_retry(self, i: int):
+        """Self-healing fetch: transient source errors (``transient``
+        classes) retry with capped exponential backoff and DETERMINISTIC
+        jitter -- the sleep for (chunk, attempt) is always the same, so a
+        rerun of a flaky stream is reproducible.  After ``retries`` failed
+        retries the chunk is declared lost via ``StreamSourceError`` with
+        the failing chunk index; non-transient errors propagate at once."""
+        attempt = 0
+        while True:
+            try:
+                return self._fetch(i)
+            except self.transient as e:
+                attempt += 1
+                if attempt > self.retries:
+                    raise StreamSourceError(i, attempt, e) from e
+                delay = min(self.backoff * (2 ** (attempt - 1)),
+                            self.backoff_cap)
+                rng = np.random.default_rng((int(i) + 1) * 1_000_003
+                                            + attempt)
+                delay *= float(rng.uniform(0.5, 1.0))
+                self.retry_events.append((int(i), attempt, delay, repr(e)))
+                time.sleep(delay)
+
     def _produce(self, q, stop):
         def put(item) -> bool:
             # bounded put that gives up when the consumer abandoned the
@@ -214,7 +268,7 @@ class ChunkedStream:
 
         try:
             for i in range(self.start_chunk, self.n_chunks):
-                chunk = _pad_chunk(i, self._fetch(i), self.chunk_len)
+                chunk = _pad_chunk(i, self._fetch_retry(i), self.chunk_len)
                 if self.to_device:
                     # async host->device copy of chunk k+1 overlaps chunk
                     # k's compute (device_put returns immediately)

@@ -24,6 +24,28 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_mesh_from_proposal(shape, axes):
+    """Build a Mesh from ``Supervisor.propose_mesh`` output.
+
+    Unlike ``jax.make_mesh`` (which insists on consuming EVERY visible
+    device), this uses the FIRST prod(shape) devices -- a survivor mesh
+    after host loss is by definition smaller than the full device set,
+    and the dead hosts' devices are still visible to the single-process
+    simulation."""
+    import math
+
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n = math.prod(shape)
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(
+            f"mesh proposal {tuple(shape)} needs {n} devices, "
+            f"only {len(devs)} visible")
+    return Mesh(np.asarray(devs[:n]).reshape(tuple(shape)), tuple(axes))
+
+
 def make_local_mesh(model_parallel: int = 1):
     """Single-host mesh over whatever devices exist (tests/examples)."""
     n = jax.device_count()

@@ -1,0 +1,194 @@
+"""Fault injection for the chunked streaming runtime (chaos layer).
+
+A streaming runtime's recovery story is only credible if the failures are
+actually exercised.  ``FaultInjector`` produces the four failure classes a
+long-running SAMOA-style deployment sees, deterministically, so the chaos
+suite can assert exact recovery semantics:
+
+  * process death mid-chunk (``kill_at_chunk``): raised AFTER the chunk's
+    compute but BEFORE its metrics/checkpoint land, so the work since the
+    last checkpoint is genuinely lost and resume must replay it
+    (``kill_mode="exit"`` uses ``os._exit`` for real-process round-trips:
+    no atexit handlers, the async checkpoint writer dies mid-flight --
+    exactly what the atomic tmp+rename protocol must survive);
+  * transient stream-source errors (``flaky_chunks``): the wrapped fetch
+    raises ``TransientSourceError`` a configured number of times per
+    chunk, driving ``ChunkedStream``'s backoff/retry path;
+  * non-finite carry (``poison_at_chunk``): one inexact leaf of the
+    post-chunk engine carry gets a NaN, simulating numeric blow-up during
+    that chunk's compute -- the evaluation's boundary finite-check must
+    roll back and skip-or-retry;
+  * on-disk checkpoint corruption (``corrupt_checkpoint``): flip tensor
+    bytes / truncate the npz / break the manifest of a chosen step, so
+    ``CheckpointManager``'s newest-intact fallback is tested against real
+    bad bytes, not mocks.
+
+Everything here is deliberately free of randomness: kill/poison sites are
+explicit chunk indices and corruption is byte-deterministic, so a failing
+chaos test reproduces byte-for-byte.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import TransientSourceError
+
+
+class SimulatedKill(RuntimeError):
+    """Injected process death.  Deliberately NOT a subclass of anything the
+    runtime catches: it must unwind through the evaluation like a real
+    SIGKILL-adjacent crash would, leaving only the on-disk checkpoints."""
+
+    def __init__(self, chunk_index: int):
+        super().__init__(f"simulated kill at chunk {chunk_index}")
+        self.chunk_index = int(chunk_index)
+
+
+def carry_all_finite(carry) -> bool:
+    """True iff every inexact (float/complex) leaf of `carry` is finite.
+
+    One fused all-reduce per leaf, combined on host -- cheap relative to a
+    chunk's compute, and safe under a mesh (jnp.all over a sharded array
+    lowers to the collective).  Integer/bool leaves are vacuously fine."""
+    oks = []
+    for leaf in jax.tree.leaves(carry):
+        x = jnp.asarray(leaf)
+        if jnp.issubdtype(x.dtype, jnp.inexact) and x.size:
+            oks.append(bool(jnp.all(jnp.isfinite(x))))
+    return all(oks)
+
+
+def poison_carry(carry, value: float = float("nan")):
+    """Return `carry` with `value` written into element 0 of the FIRST
+    inexact leaf (tree order) -- the minimal non-finite perturbation, so a
+    finite-check that misses any single leaf fails the chaos suite."""
+    done = [False]
+
+    def poison(x):
+        x = jnp.asarray(x)
+        if done[0] or not jnp.issubdtype(x.dtype, jnp.inexact) or not x.size:
+            return x
+        done[0] = True
+        return x.reshape(-1).at[0].set(value).reshape(x.shape)
+
+    out = jax.tree.map(poison, carry)
+    if not done[0]:
+        raise ValueError("carry has no inexact leaf to poison")
+    return out
+
+
+class FaultInjector:
+    """Deterministic fault schedule for one evaluation run.
+
+    Each fault fires AT MOST ONCE (``killed`` / ``poisoned`` latch), so a
+    rolled-back or resumed run replays the failure site cleanly -- the
+    injector models a fault that happened, not a cursed chunk.
+
+    kill_at_chunk:  chunk index after whose compute the run dies.
+    kill_mode:      "raise" -> ``SimulatedKill`` unwinds the evaluation
+                    (in-process tests); "exit" -> ``os._exit(kill_exit_code)``
+                    (subprocess round-trips; skips atexit/finally).
+    poison_at_chunk: chunk index AFTER whose compute the carry gets a NaN
+                    (the blow-up happened inside that chunk).
+    flaky_chunks:   chunk indices whose source fetch fails transiently.
+    flaky_failures: how many times each flaky chunk's fetch fails before
+                    succeeding (> the stream's retry budget => fatal
+                    ``StreamSourceError``).
+    """
+
+    def __init__(self, *, kill_at_chunk: int | None = None,
+                 kill_mode: str = "raise", kill_exit_code: int = 113,
+                 poison_at_chunk: int | None = None,
+                 poison_value: float = float("nan"),
+                 flaky_chunks=(), flaky_failures: int = 1):
+        if kill_mode not in ("raise", "exit"):
+            raise ValueError(f"unknown kill_mode {kill_mode!r}")
+        self.kill_at_chunk = kill_at_chunk
+        self.kill_mode = kill_mode
+        self.kill_exit_code = int(kill_exit_code)
+        self.poison_at_chunk = poison_at_chunk
+        self.poison_value = poison_value
+        self.flaky_failures = {int(c): int(flaky_failures)
+                               for c in flaky_chunks}
+        self.killed = False
+        self.poisoned = False
+
+    # ------------------------------------------------------------- hooks
+
+    def maybe_kill(self, chunk_index: int):
+        """Die after chunk `chunk_index`'s compute (before its checkpoint)."""
+        if self.kill_at_chunk is None or self.killed \
+                or int(chunk_index) != int(self.kill_at_chunk):
+            return
+        self.killed = True
+        if self.kill_mode == "exit":
+            os._exit(self.kill_exit_code)
+        raise SimulatedKill(chunk_index)
+
+    def maybe_poison(self, chunk_index: int, carry):
+        """NaN the carry leaving chunk `chunk_index` (once)."""
+        if self.poison_at_chunk is None or self.poisoned \
+                or int(chunk_index) != int(self.poison_at_chunk):
+            return carry
+        self.poisoned = True
+        return poison_carry(carry, self.poison_value)
+
+    def wrap_fetch(self, fetch):
+        """Wrap a ``ChunkedStream`` fetch fn: scheduled chunks raise
+        ``TransientSourceError`` ``flaky_failures`` times, then recover."""
+        remaining = dict(self.flaky_failures)
+
+        def flaky(i):
+            left = remaining.get(int(i), 0)
+            if left > 0:
+                remaining[int(i)] = left - 1
+                raise TransientSourceError(
+                    f"injected transient source failure on chunk {i} "
+                    f"({left - 1} more to come)")
+            return fetch(i)
+
+        return flaky
+
+
+def corrupt_checkpoint(directory, step: int | None = None, *,
+                       mode: str = "tensor"):
+    """Corrupt checkpoint `step` (default: newest) under `directory`.
+
+    mode="tensor"    rewrite tensors.npz with one element flipped -- the
+                     zip stays readable, the manifest md5 does not match
+                     (the checksum-detection path);
+    mode="truncate"  chop the npz in half -- unreadable archive (the
+                     torn-write / bad-disk path);
+    mode="manifest"  replace manifest.json with invalid JSON (metadata
+                     loss).
+
+    Returns the corrupted step."""
+    d = Path(directory)
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {d}")
+    if step is None:
+        step = steps[-1]
+    target = d / f"step_{step:010d}"
+    if mode == "tensor":
+        npz = target / "tensors.npz"
+        data = np.load(npz)
+        arrs = {k: data[k].copy() for k in data.files}
+        a = arrs["t0"].reshape(-1).view(np.uint8)
+        a[0] ^= 0xFF
+        np.savez(npz, **arrs)
+    elif mode == "truncate":
+        npz = target / "tensors.npz"
+        raw = npz.read_bytes()
+        npz.write_bytes(raw[:max(1, len(raw) // 2)])
+    elif mode == "manifest":
+        (target / "manifest.json").write_text("{corrupt")
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return step

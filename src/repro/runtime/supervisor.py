@@ -72,7 +72,13 @@ class Supervisor:
     # ---------------------------------------------------------- heartbeats
 
     def heartbeat(self, host, step: int, duration: float | None = None):
-        st = self.hosts[host]
+        st = self.hosts.get(host)
+        if st is None:
+            # late joiner (elastic scale-UP): a host that was not in the
+            # initial membership registers as HEALTHY instead of
+            # KeyError'ing the coordinator
+            st = self.hosts[host] = HostState()
+            self.events.append(("join", host, step))
         now = self.clock()
         st.last_step = step
         st.last_seen = now
@@ -81,6 +87,18 @@ class Supervisor:
         if st.status is HostStatus.DEAD:
             st.status = HostStatus.HEALTHY      # rejoin
             self.events.append(("rejoin", host, step))
+
+    def declare_dead(self, host, step: int | None = None):
+        """Out-of-band failure notification (fault injection, the engine
+        observing a connection reset): mark the host DEAD immediately
+        instead of waiting ``dead_after`` seconds of silence.  The next
+        ``propose_mesh`` call then sizes the elastic re-place mesh from
+        the survivors."""
+        st = self.hosts.setdefault(host, HostState())
+        if st.status is not HostStatus.DEAD:
+            st.status = HostStatus.DEAD
+            self.events.append(
+                ("dead", host, st.last_step if step is None else step))
 
     def sweep(self):
         """Periodic check: mark dead hosts, detect stragglers.

@@ -342,3 +342,122 @@ else:
         macro = clustream.macro_cluster(merged, CC)
         assert bool(jnp.isfinite(macro).all())
         assert macro.shape == (CC.n_macro, CC.n_dims)
+
+    # ------------------------------- elastic re-place after host loss
+
+    def test_elastic_vht_kill_resume_8_to_4_bit_identical(cls_stream,
+                                                          tmp_path):
+        """The ISSUE-6 acceptance path: a chunked VHT run on the full
+        8-device mesh is killed at a chunk boundary, half the hosts are
+        declared dead, and the resumed run lands on the survivor mesh
+        proposed by the supervisor (8 -> 4 devices via ``propose_mesh`` +
+        ``make_mesh_from_proposal`` + ``place_carry``) -- finishing with
+        final metrics, curve, and carry bit-identical to the
+        uninterrupted single-device run."""
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.evaluation import ChunkedPrequentialEvaluation
+        from repro.data.pipeline import ChunkedStream
+        from repro.launch.mesh import make_mesh_from_proposal
+        from repro.ml.vht import VHT, VHTConfig
+        from repro.runtime import FaultInjector, SimulatedKill, Supervisor
+
+        xs, ys = cls_stream
+        vht = VHT(VHTConfig(ETC))
+        payload = {"x": xs, "y": ys}
+
+        ref = ChunkedPrequentialEvaluation(
+            vht, ChunkedStream(payload, 2)).run(resume=False)
+        assert int(ref.extra["carry"]["states"]["vht"]["n_nodes"]) > 1
+
+        sup = Supervisor([f"h{i}" for i in range(N_DEVICES)],
+                         dead_after=1e9)
+        for h in list(sup.hosts):
+            sup.heartbeat(h, step=-1)
+        shape, axes = sup.propose_mesh(1, model_parallel=4)
+        assert shape == (2, 4)
+        mesh8 = make_mesh_from_proposal(shape, axes)
+        mgr = CheckpointManager(tmp_path, keep=0, async_write=False)
+        killed = ChunkedPrequentialEvaluation(
+            vht, ChunkedStream(payload, 2), engine=ShardMapEngine(mesh8),
+            checkpoint=mgr, checkpoint_every=1, supervisor=sup, host="h0",
+            injector=FaultInjector(kill_at_chunk=1))
+        with pytest.raises(SimulatedKill):
+            killed.run(resume=False)
+        assert mgr.latest_step() == 1     # chunk 1's work was lost
+
+        for h in ("h4", "h5", "h6", "h7"):     # half the fleet is gone
+            sup.declare_dead(h)
+        shape, axes = sup.propose_mesh(1, model_parallel=4)
+        assert shape == (1, 4)                 # survivor mesh: 4 devices
+        mesh4 = make_mesh_from_proposal(shape, axes)
+        assert mesh4.devices.size == 4
+
+        resumed = ChunkedPrequentialEvaluation(
+            vht, ChunkedStream(payload, 2), engine=ShardMapEngine(mesh4),
+            checkpoint=CheckpointManager(tmp_path, keep=0,
+                                         async_write=False))
+        r = resumed.run(resume=True)
+        assert r.metric == ref.metric and r.curve == ref.curve
+        _assert_trees_identical(ref.extra["carry"], r.extra["carry"])
+
+    def test_elastic_vamr_replace_keeps_state_partitioned(reg_stream,
+                                                          tmp_path):
+        """Same elastic path with genuinely PARTITIONED state: VAMR's
+        per-rule axis lives sharded over 'model' on the 8-device mesh; the
+        resumed run re-places it onto the 4-device survivor mesh through
+        the checkpoint (logical arrays) + ``place_carry`` and the final
+        state equals the single-device run while physically occupying only
+        the 4 surviving devices."""
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.evaluation import ChunkedPrequentialEvaluation
+        from repro.data.pipeline import ChunkedStream
+        from repro.launch.mesh import make_mesh_from_proposal
+        from repro.ml.amrules import VAMR
+        from repro.runtime import FaultInjector, SimulatedKill, Supervisor
+
+        xs, ys = reg_stream
+        vamr = VAMR(RC)
+        payload = {"x": xs, "y": ys}
+
+        ref = ChunkedPrequentialEvaluation(
+            vamr, ChunkedStream(payload, 4)).run(resume=False)
+        assert int(ref.extra["carry"]["states"]["vamr"]["n_created"]) > 0
+
+        sup = Supervisor([f"h{i}" for i in range(N_DEVICES)],
+                         dead_after=1e9)
+        # all 8 devices on the model axis (VAMR's float statistics are
+        # only reduction-order-stable along 'model'; a data axis > 1
+        # would reassociate the per-batch sums)
+        shape, axes = sup.propose_mesh(1, model_parallel=8)
+        assert shape == (1, 8)
+        mesh8 = make_mesh_from_proposal(shape, axes)
+        mgr = CheckpointManager(tmp_path, keep=0, async_write=False)
+        killed = ChunkedPrequentialEvaluation(
+            vamr, ChunkedStream(payload, 4), engine=ShardMapEngine(mesh8),
+            checkpoint=mgr, checkpoint_every=1,
+            injector=FaultInjector(kill_at_chunk=2))
+        with pytest.raises(SimulatedKill):
+            killed.run(resume=False)
+
+        for h in ("h4", "h5", "h6", "h7"):
+            sup.declare_dead(h)
+        # the survivors cannot sustain TP=8 -- the supervisor says so
+        # loudly, and the operator re-proposes at TP=4 (the checkpoint is
+        # mesh-independent, so the re-partition is just place_carry)
+        with pytest.raises(RuntimeError, match="not enough chips"):
+            sup.propose_mesh(1, model_parallel=8)
+        mesh4 = make_mesh_from_proposal(*sup.propose_mesh(
+            1, model_parallel=4))
+        resumed = ChunkedPrequentialEvaluation(
+            vamr, ChunkedStream(payload, 4), engine=ShardMapEngine(mesh4),
+            checkpoint=CheckpointManager(tmp_path, keep=0,
+                                         async_write=False))
+        r = resumed.run(resume=True)
+        assert r.metric == ref.metric and r.curve == ref.curve
+        _assert_trees_identical(ref.extra["carry"], r.extra["carry"])
+        stats = r.extra["carry"]["states"]["vamr"]["stats"]
+        # per-rule state physically lives on ONLY the 4 survivor devices
+        assert len(stats.sharding.device_set) == 4
+        assert set(stats.sharding.device_set) <= set(mesh4.devices.flat)
+        shard_rows = {s.data.shape[0] for s in stats.addressable_shards}
+        assert shard_rows == {RC.max_rules // 4}
