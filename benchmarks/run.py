@@ -20,7 +20,7 @@ and OzaBag with its member axis over 'data' -- merging the resulting
 ``sharded.*`` arms into the existing BENCH json instead of replacing it.
 
   PYTHONPATH=src python -m benchmarks.run [--full|--fast] [--sharded] \
-      [--only vht|amrules|clustream|ensemble|lm|kernels]
+      [--only vht|amrules|clustream|ensemble|lm|kernels|serving]
 """
 
 from __future__ import annotations
@@ -55,7 +55,7 @@ def main() -> None:
 
     from benchmarks import (amrules_benchmarks, clustream_benchmarks,
                             ensemble_benchmarks, kernel_benchmarks,
-                            lm_roofline, vht_benchmarks)
+                            lm_roofline, serving_benchmarks, vht_benchmarks)
 
     suites = {
         "vht": vht_benchmarks,
@@ -64,6 +64,7 @@ def main() -> None:
         "ensemble": ensemble_benchmarks,
         "lm": lm_roofline,
         "kernels": kernel_benchmarks,
+        "serving": serving_benchmarks,
     }
     if args.sharded:
         suites = {k: v for k, v in suites.items()

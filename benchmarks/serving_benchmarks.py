@@ -1,0 +1,193 @@
+"""Online-serving benchmark: predict latency under live training
+-> BENCH_serving.json.
+
+One arm per offered load: a VHT trains on a chunked stream in a
+background thread, publishing validated snapshots at every chunk
+boundary through a ``SnapshotPublisher``; the foreground thread plays an
+open-loop load generator at a FIXED OFFERED QPS against a
+``ModelServer`` (micro-batching, bounded queue, per-request deadlines).
+Reported per arm:
+
+  * p50 / p99 / max end-to-end latency over the answered requests
+    (submit -> answer, including queueing and micro-batch wait);
+  * snapshot staleness (chunks behind training) per answer: mean + max,
+    plus how many answers were served in ``degraded`` mode;
+  * the full admission/shedding account: answered, shed, overloaded,
+    unavailable.  The harness RAISES when the account does not
+    reconcile -- a shed request silently missing from the books is a
+    correctness bug, not a footnote.
+
+Fast mode keeps the arm CPU-friendly (one load level, short window);
+--full adds a higher offered load.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core.engines import JitEngine
+from repro.core.evaluation import ChunkedPrequentialEvaluation
+from repro.data.generators import RandomTreeGenerator, bin_numeric
+from repro.data.pipeline import ChunkedStream
+from repro.ml.htree import TreeConfig
+from repro.ml.vht import VHT, VHTConfig
+from repro.serving import ModelServer, ServeConfig, SnapshotPublisher
+
+ROWS = []
+BENCH = {}    # structured serving numbers -> BENCH_serving.json
+
+N_ATTRS = 12
+N_BINS = 8
+TC = TreeConfig(n_attrs=N_ATTRS, n_bins=N_BINS, n_classes=2, max_nodes=127,
+                n_min=50, delta=0.05, tau=0.1)
+
+
+def emit(name, us_per_call, derived):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _train_stream(n_chunks, chunk_len, batch):
+    gen = RandomTreeGenerator(n_cat=6, n_num=6, depth=5, seed=3)
+    sample = jax.jit(gen.sample, static_argnums=(1,))
+
+    def fetch(i):
+        xs, ys = [], []
+        for s in range(chunk_len):
+            x, y = sample(jax.random.PRNGKey(i * chunk_len + s + 1), batch)
+            xs.append(bin_numeric(x, N_BINS))
+            ys.append(y)
+        return {"x": np.stack([np.asarray(v) for v in xs]),
+                "y": np.stack([np.asarray(v) for v in ys])}
+
+    return ChunkedStream.from_fn(fetch, n_chunks=n_chunks,
+                                 chunk_len=chunk_len)
+
+
+def _percentile(xs, p):
+    return float(np.percentile(np.asarray(xs, np.float64), p))
+
+
+def serve_under_training(fast=True):
+    n_chunks = 150 if fast else 600
+    chunk_len, batch = 4, 128
+    loads = [250] if fast else [250, 1500]
+    window_s = 2.5 if fast else 6.0
+    cfg = ServeConfig(max_batch=16, max_wait_ms=2.0, queue_limit=128,
+                      deadline_ms=250.0)
+    max_staleness = 8
+
+    learner = VHT(VHTConfig(TC))
+    rng = np.random.default_rng(0)
+    pool = rng.integers(0, N_BINS, (512, N_ATTRS)).astype(np.int32)
+
+    for qps in loads:
+        pub = SnapshotPublisher(max_staleness_chunks=max_staleness)
+        ev = ChunkedPrequentialEvaluation(
+            learner, _train_stream(n_chunks, chunk_len, batch),
+            engine=JitEngine(), publisher=pub)
+        train_res = {}
+        done = threading.Event()
+
+        def train():
+            try:
+                train_res["res"] = ev.run(resume=False)
+            finally:
+                done.set()
+
+        t = threading.Thread(target=train, daemon=True)
+        t.start()
+        deadline = time.monotonic() + 30.0
+        while pub.current() is None:
+            if done.is_set() and pub.current() is None:
+                raise RuntimeError("training finished without publishing")
+            if time.monotonic() > deadline:
+                raise RuntimeError("no snapshot published within 30s")
+            time.sleep(0.001)
+
+        srv = ModelServer(learner, pub, cfg)
+        # warm the predict program outside the measured window
+        srv.submit(pool[0], deadline_ms=10_000.0).result(timeout=30)
+
+        reqs = []
+        t0 = time.monotonic()
+        i = 0
+        # open-loop generator: request i is DUE at t0 + i/qps regardless
+        # of how the server is doing -- the honest way to offer fixed QPS
+        while True:
+            due = t0 + i / qps
+            now = time.monotonic()
+            if now - t0 >= window_s:
+                break
+            if now < due:
+                time.sleep(min(due - now, 0.002))
+                continue
+            reqs.append(srv.submit(pool[i % len(pool)]))
+            i += 1
+        submit_window = time.monotonic() - t0
+        for r in reqs:
+            r.result(timeout=30)
+        srv.stop()
+        done.wait(timeout=120)
+        t.join(timeout=5)
+
+        st = srv.status()
+        resolved = (st["answered"] + st["shed"] + st["rejected_overloaded"]
+                    + st["rejected_unavailable"])
+        if st["submitted"] != resolved:
+            raise RuntimeError(
+                f"serving accounting broken: {st['submitted']} submitted "
+                f"but only {resolved} accounted for "
+                f"(answered={st['answered']} shed={st['shed']} "
+                f"overloaded={st['rejected_overloaded']} "
+                f"unavailable={st['rejected_unavailable']}) -- shed "
+                "requests are being silently dropped")
+        answered = [r for r in reqs if r.status == "answered"]
+        if not answered:
+            raise RuntimeError(f"no answered requests at {qps} qps")
+        for r in answered:
+            if not np.all(np.isfinite(np.asarray(r.pred, np.float64))):
+                raise RuntimeError("non-finite prediction served")
+        lat = [r.meta["latency_ms"] for r in answered]
+        stale = [r.meta["staleness_chunks"] for r in answered]
+        p50, p99 = _percentile(lat, 50), _percentile(lat, 99)
+        res = train_res.get("res")
+        pstat = pub.status()
+        tag = f"vht-q{qps}"
+        BENCH[f"serving.{tag}"] = {
+            "offered_qps": qps,
+            "achieved_offered_qps": len(reqs) / max(submit_window, 1e-9),
+            "window_s": submit_window,
+            "answered": st["answered"], "shed": st["shed"],
+            "rejected_overloaded": st["rejected_overloaded"],
+            "rejected_unavailable": st["rejected_unavailable"],
+            "p50_ms": p50, "p99_ms": p99, "max_ms": max(lat),
+            "staleness_mean_chunks": float(np.mean(stale)),
+            "staleness_max_chunks": int(max(stale)),
+            "degraded_answers": st["degraded_answers"],
+            "snapshots_published": pstat["published"],
+            "rejected_snapshots": pstat["rejected_snapshots"],
+            "train_inst_per_s": (None if res is None
+                                 else float(res.throughput)),
+            "config": {"max_batch": cfg.max_batch,
+                       "max_wait_ms": cfg.max_wait_ms,
+                       "queue_limit": cfg.queue_limit,
+                       "deadline_ms": cfg.deadline_ms,
+                       "max_staleness_chunks": max_staleness},
+        }
+        emit(f"serving.{tag}", p50 * 1e3,
+             f"p50_ms={p50:.2f};p99_ms={p99:.2f};"
+             f"answered={st['answered']};shed={st['shed']};"
+             f"overloaded={st['rejected_overloaded']};"
+             f"stale_mean={np.mean(stale):.2f};stale_max={max(stale)};"
+             f"snapshots={pstat['published']}")
+
+
+def main(fast=True):
+    serve_under_training(fast)
+    return ROWS

@@ -113,6 +113,21 @@ class CheckpointManager:
         self.async_write = async_write
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
+        self.swept_tmp = self._sweep_stale_tmp()
+
+    def _sweep_stale_tmp(self) -> int:
+        """Remove ``tmp.<step>.<pid>`` directories left behind by killed
+        writers (an ``os._exit`` mid-save never reaches the rename, and the
+        orphaned tmp dir would otherwise live forever).  Safe at
+        construction: a manager owns its directory exclusively -- only the
+        process holding this manager writes tmp dirs here, and it has not
+        started writing yet.  Returns the number swept."""
+        swept = 0
+        for p in self.dir.glob("tmp.*"):
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
+                swept += 1
+        return swept
 
     # ------------------------------------------------------------- save
 

@@ -192,7 +192,8 @@ class ChunkedPrequentialEvaluation(Task):
     def __init__(self, learner, stream, *, engine=None,
                  checkpoint=None, checkpoint_every: int = 1, key=None,
                  on_chunk=None, supervisor=None, host="host0",
-                 injector=None, check_finite: bool | None = None,
+                 injector=None, publisher=None,
+                 check_finite: bool | None = None,
                  poison_policy: str = "retry", max_poison_retries: int = 1,
                  remesh=None, chips_per_host: int = 1,
                  model_parallel: int = 1):
@@ -214,6 +215,9 @@ class ChunkedPrequentialEvaluation(Task):
         self.supervisor = supervisor
         self.host = host
         self.injector = injector
+        self.publisher = publisher   # serving SnapshotPublisher (or the
+                                     # chaos-wrapped proxy); fed at chunk
+                                     # boundaries on the healthy path only
         self.check_finite = check_finite
         if poison_policy not in ("retry", "skip"):
             raise ValueError(f"unknown poison_policy {poison_policy!r}")
@@ -358,6 +362,11 @@ class ChunkedPrequentialEvaluation(Task):
                         cursor = chunk.index + 1
                         continue
                     tc = time.perf_counter()
+                    if self.injector is not None:
+                        # straggler injection: the sleep lands inside the
+                        # timed region so the supervisor's heartbeat sees
+                        # the slow chunk
+                        self.injector.maybe_delay(chunk.index)
                     carry, outs = self.engine.run_stream_chunked(
                         learner, carry, [chunk])
                     if self.injector is not None:
@@ -375,6 +384,15 @@ class ChunkedPrequentialEvaluation(Task):
                     if not timed:
                         jax.block_until_ready(jax.tree.leaves(carry)[0])
                         timed.append((time.perf_counter(), acc.seen))
+                    if self.publisher is not None:
+                        # snapshot publication rides the same boundary as
+                        # the metrics/checkpoint: only a carry that passed
+                        # the finite check reaches here, and the publisher
+                        # re-validates (finiteness + manifest structure
+                        # round-trip) before readers see anything
+                        from repro.serving.snapshot import model_state_of
+                        self.publisher.publish(chunk.index,
+                                               model_state_of(carry))
                     if self.checkpoint is not None \
                             and (chunk.index + 1) % every == 0:
                         self._save(chunk.index, carry, acc)
@@ -411,6 +429,16 @@ class ChunkedPrequentialEvaluation(Task):
             self.checkpoint.wait()
         report["source_retries"] = list(
             getattr(self.stream, "retry_events", []))
+        # the events list is a capped ring buffer; the COUNT stays exact
+        report["source_retry_count"] = int(
+            getattr(self.stream, "retry_count",
+                    len(report["source_retries"])))
+        report["source_retries_dropped"] = int(
+            getattr(self.stream, "retry_events_dropped", 0))
+        if self.publisher is not None:
+            status = getattr(self.publisher, "status", None)
+            if callable(status):
+                report["snapshots"] = status()
         return PrequentialResult(
             metric=acc.metric, throughput=thr, curve=acc.curve,
             extra={"carry": carry, "seen": acc.seen,

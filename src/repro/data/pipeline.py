@@ -15,6 +15,7 @@ semantics).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -173,6 +174,7 @@ class ChunkedStream:
                  n_chunks: int | None = None, n_steps: int | None = None,
                  start_chunk: int = 0, prefetch: int = 2, sharding=None,
                  to_device: bool = True, retries: int = 3,
+                 retry_events_cap: int = 256,
                  backoff: float = 0.05, backoff_cap: float = 5.0,
                  transient: tuple = (TransientSourceError, ConnectionError,
                                      TimeoutError)):
@@ -188,8 +190,20 @@ class ChunkedStream:
         self.backoff_cap = float(backoff_cap)
         self.transient = tuple(transient)
         # (chunk, attempt, slept_s, error) per retried fetch -- run reports
-        # surface these so silent source flakiness stays visible
-        self.retry_events: list[tuple] = []
+        # surface these so silent source flakiness stays visible.  A ring
+        # buffer: a long-lived flaky stream would otherwise grow the list
+        # without bound, so only the newest `retry_events_cap` events are
+        # kept while `retry_count` stays exact (the dropped count is
+        # `retry_events_dropped`)
+        if retry_events_cap < 1:
+            raise ValueError(
+                f"retry_events_cap must be >= 1, got {retry_events_cap}")
+        self.retry_events: collections.deque = collections.deque(
+            maxlen=int(retry_events_cap))
+        # shared mutable cell, NOT a plain int: ``starting_at`` views copy
+        # __dict__, and retries observed through a resumed view must count
+        # against the same stream (the deque is already shared by identity)
+        self._retry_stats = {"count": 0}
         if fetch is not None:
             if n_chunks is None:
                 raise ValueError("from_fn streams need n_chunks")
@@ -250,6 +264,7 @@ class ChunkedStream:
                                             + attempt)
                 delay *= float(rng.uniform(0.5, 1.0))
                 self.retry_events.append((int(i), attempt, delay, repr(e)))
+                self._retry_stats["count"] += 1
                 time.sleep(delay)
 
     def _produce(self, q, stop):
@@ -298,6 +313,16 @@ class ChunkedStream:
                 yield item
         finally:
             stop.set()
+
+    @property
+    def retry_count(self) -> int:
+        """Exact number of retried fetches (never capped)."""
+        return self._retry_stats["count"]
+
+    @property
+    def retry_events_dropped(self) -> int:
+        """Retry events evicted from the ring buffer (count stays exact)."""
+        return self.retry_count - len(self.retry_events)
 
     def __len__(self):
         return self.n_chunks - self.start_chunk

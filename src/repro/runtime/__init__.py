@@ -1,8 +1,8 @@
 from repro.runtime.chaos import (FaultInjector, SimulatedKill,
                                  carry_all_finite, corrupt_checkpoint,
-                                 poison_carry)
+                                 poison_carry, request_burst)
 from repro.runtime.supervisor import Supervisor, StragglerPolicy, HostStatus
 
 __all__ = ["Supervisor", "StragglerPolicy", "HostStatus", "FaultInjector",
            "SimulatedKill", "carry_all_finite", "corrupt_checkpoint",
-           "poison_carry"]
+           "poison_carry", "request_burst"]

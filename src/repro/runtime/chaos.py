@@ -31,6 +31,7 @@ chaos test reproduces byte-for-byte.
 from __future__ import annotations
 
 import os
+import time
 from pathlib import Path
 
 import jax
@@ -100,13 +101,28 @@ class FaultInjector:
     flaky_failures: how many times each flaky chunk's fetch fails before
                     succeeding (> the stream's retry budget => fatal
                     ``StreamSourceError``).
+
+    Serving-side faults (exercised through ``wrap_publisher``):
+
+    stall_publish_chunks:    chunk indices whose snapshot publication is
+                    silently dropped (the training loop ran, the publish
+                    never landed) -- staleness grows and the staleness
+                    SLO must flip the ``degraded`` flag;
+    poison_snapshot_at_chunk: chunk index whose PUBLISHED snapshot (not
+                    the training carry) gets a NaN before validation --
+                    the publisher must reject it and keep last-good;
+    delay_chunk(i, s):       sleep `s` seconds before chunk i's compute
+                    (straggler / slow-pipeline injection; fires once).
     """
 
     def __init__(self, *, kill_at_chunk: int | None = None,
                  kill_mode: str = "raise", kill_exit_code: int = 113,
                  poison_at_chunk: int | None = None,
                  poison_value: float = float("nan"),
-                 flaky_chunks=(), flaky_failures: int = 1):
+                 flaky_chunks=(), flaky_failures: int = 1,
+                 stall_publish_chunks=(),
+                 poison_snapshot_at_chunk: int | None = None,
+                 poison_snapshot_value: float = float("nan")):
         if kill_mode not in ("raise", "exit"):
             raise ValueError(f"unknown kill_mode {kill_mode!r}")
         self.kill_at_chunk = kill_at_chunk
@@ -116,8 +132,15 @@ class FaultInjector:
         self.poison_value = poison_value
         self.flaky_failures = {int(c): int(flaky_failures)
                                for c in flaky_chunks}
+        self.stall_publish_chunks = {int(c) for c in stall_publish_chunks}
+        self.poison_snapshot_at_chunk = poison_snapshot_at_chunk
+        self.poison_snapshot_value = poison_snapshot_value
         self.killed = False
         self.poisoned = False
+        self.snapshot_poisoned = False
+        self.stalled_publishes = 0
+        self.delay_chunks: dict[int, float] = {}
+        self.delays_fired: set[int] = set()
 
     # ------------------------------------------------------------- hooks
 
@@ -139,6 +162,30 @@ class FaultInjector:
         self.poisoned = True
         return poison_carry(carry, self.poison_value)
 
+    def delay_chunk(self, index: int, seconds: float):
+        """Schedule a one-shot sleep before chunk `index`'s compute --
+        the straggler injection.  Chainable; multiple chunks may be
+        delayed (each fires once, same latch discipline as kill/poison)."""
+        self.delay_chunks[int(index)] = float(seconds)
+        return self
+
+    def maybe_delay(self, chunk_index: int):
+        """Sleep the scheduled delay for `chunk_index` (once)."""
+        i = int(chunk_index)
+        s = self.delay_chunks.get(i)
+        if s is None or i in self.delays_fired:
+            return
+        self.delays_fired.add(i)
+        time.sleep(s)
+
+    def wrap_publisher(self, publisher):
+        """Wrap a ``SnapshotPublisher`` with the serving-side faults:
+        stalled publications (dropped, but the train cursor still
+        advances -- exactly what a wedged publisher thread looks like to
+        readers) and poisoned snapshots (NaN'd BEFORE validation, so the
+        publisher's reject path is exercised against real bad state)."""
+        return _ChaosPublisher(self, publisher)
+
     def wrap_fetch(self, fetch):
         """Wrap a ``ChunkedStream`` fetch fn: scheduled chunks raise
         ``TransientSourceError`` ``flaky_failures`` times, then recover."""
@@ -154,6 +201,45 @@ class FaultInjector:
             return fetch(i)
 
         return flaky
+
+
+class _ChaosPublisher:
+    """Publisher proxy injecting stall / poison-snapshot faults (see
+    ``FaultInjector.wrap_publisher``).  Everything except ``publish`` --
+    ``current``/``status``/``degraded``/counters -- delegates to the real
+    publisher, so the server under test reads true state."""
+
+    def __init__(self, injector: FaultInjector, publisher):
+        self._injector = injector
+        self._publisher = publisher
+
+    def publish(self, chunk_index: int, state) -> bool:
+        inj = self._injector
+        i = int(chunk_index)
+        if i in inj.stall_publish_chunks:
+            inj.stalled_publishes += 1
+            # the training loop DID finish the chunk; only the publish is
+            # lost.  observe() keeps the train cursor honest so staleness
+            # grows exactly as it would with a wedged publisher thread.
+            self._publisher.observe(i)
+            return False
+        if (inj.poison_snapshot_at_chunk is not None
+                and i == int(inj.poison_snapshot_at_chunk)
+                and not inj.snapshot_poisoned):
+            inj.snapshot_poisoned = True
+            state = poison_carry(state, inj.poison_snapshot_value)
+        return self._publisher.publish(i, state)
+
+    def __getattr__(self, name):
+        return getattr(self._publisher, name)
+
+
+def request_burst(server, xs, *, deadline_ms: float | None = None):
+    """Fire one request per row of `xs` back-to-back (no pacing) -- the
+    burst injection.  Returns the list of request handles; the caller
+    asserts the admission-control outcome (bounded queue, explicit
+    ``overloaded`` rejections, exact accounting)."""
+    return [server.submit(x, deadline_ms=deadline_ms) for x in xs]
 
 
 def corrupt_checkpoint(directory, step: int | None = None, *,

@@ -1,0 +1,7 @@
+from repro.serving.predict import make_predict_fn, reference_predict
+from repro.serving.server import ModelServer, Request, ServeConfig
+from repro.serving.snapshot import Snapshot, SnapshotPublisher, model_state_of
+
+__all__ = ["Snapshot", "SnapshotPublisher", "model_state_of",
+           "make_predict_fn", "reference_predict",
+           "ModelServer", "Request", "ServeConfig"]

@@ -1,0 +1,557 @@
+"""Serving suite: the robust online predict path against its chaos layer.
+
+Covers the full train/serve split: snapshot publication (validation,
+double-buffering, rejection + circuit breaker), the predict-only fast
+paths (bit-parity with the training loop for all four learner families),
+the server's micro-batching / admission control / deadline shedding, and
+the graceful-degradation story under injected faults -- publisher stall,
+poisoned snapshots, request bursts.  The invariants everywhere: never a
+non-finite answer, never an unbounded queue, every request accounted
+for, recovery without restart."""
+
+import collections
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.engines import JitEngine
+from repro.core.evaluation import ChunkedPrequentialEvaluation
+from repro.data.generators import RandomTreeGenerator, bin_numeric
+from repro.data.pipeline import ChunkedStream, TransientSourceError
+from repro.ml.amrules import AMRules, RulesConfig
+from repro.ml.clustream import CluStream, CluStreamConfig
+from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
+from repro.ml.htree import TreeConfig
+from repro.ml.vht import VHT, VHTConfig
+from repro.runtime import FaultInjector, request_burst
+from repro.serving import (ModelServer, ServeConfig, SnapshotPublisher,
+                           make_predict_fn, model_state_of,
+                           reference_predict)
+
+B = 64
+T = 8           # stream length (micro-batches)
+C = 2           # chunk_len -> 4 chunks (indices 0..3)
+N_CHUNKS = T // C
+TC = TreeConfig(n_attrs=12, n_bins=8, n_classes=2, max_nodes=63, n_min=20,
+                delta=0.05, tau=0.1)
+RC = RulesConfig(n_attrs=12, n_bins=8, max_rules=16, n_min=100)
+# period > T*B so the macro centroids are constant through the stream:
+# the training step's ssq then reads the same centers a snapshot holds
+CC = CluStreamConfig(n_dims=12, n_micro=16, n_macro=3, period=100_000)
+
+
+def _make_stream():
+    gen = RandomTreeGenerator(n_cat=6, n_num=6, depth=5, seed=3)
+    key = jax.random.PRNGKey(0)
+    xs, ys = [], []
+    for _ in range(T):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, B)
+        xs.append(bin_numeric(x, 8))
+        ys.append(y)
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+XS, YS = _make_stream()
+
+LEARNERS = {
+    "vht": VHT(VHTConfig(TC)),
+    "ozabag": OzaEnsemble(EnsembleConfig(tree=TC, n_members=3)),
+    "amrules": AMRules(RC),
+    "clustream": CluStream(CC),
+}
+ENGINES = {name: JitEngine() for name in LEARNERS}
+FAMILIES = list(LEARNERS)
+
+
+def _payload(family):
+    if family == "clustream":
+        return {"x": XS.astype(jnp.float32)}
+    if family == "amrules":
+        return {"x": XS, "y": YS.astype(jnp.float32)}
+    return {"x": XS, "y": YS}
+
+
+def _vht_stream():
+    return ChunkedStream(_payload("vht"), C)
+
+
+# One chunk-by-chunk trace per family: the carry AFTER each chunk (the
+# publishable boundary states) plus each chunk's stacked step metrics.
+_TRACE: dict = {}
+
+
+def _trace(family):
+    if family not in _TRACE:
+        learner, eng = LEARNERS[family], ENGINES[family]
+        carry = eng.init(learner, jax.random.PRNGKey(0))
+        carries, outs = [], []
+        for chunk in ChunkedStream(_payload(family), C):
+            carry, o = eng.run_stream_chunked(learner, carry, [chunk])
+            carries.append(carry)
+            outs.append(o)
+        _TRACE[family] = (carries, outs)
+    return _TRACE[family]
+
+
+def _fresh_state(family):
+    learner = LEARNERS[family]
+    carries, _ = _trace(family)
+    return model_state_of(carries[0])
+
+
+def _assert_serve_train_parity(family, k):
+    """A snapshot published at chunk boundary k answers the first step of
+    chunk k+1 exactly as the training loop itself did."""
+    learner = LEARNERS[family]
+    carries, outs = _trace(family)
+    pub = SnapshotPublisher()
+    assert pub.publish(k, model_state_of(carries[k]))
+    snap = pub.current()
+    payload = _payload(family)
+    x = np.asarray(payload["x"][(k + 1) * C])
+
+    pred = np.asarray(make_predict_fn(learner)(snap.state, jnp.asarray(x)))
+    ref = np.asarray(reference_predict(
+        learner, model_state_of(carries[k]), jnp.asarray(x)))
+    np.testing.assert_array_equal(pred, ref)
+    assert np.all(np.isfinite(pred.astype(np.float64)))
+
+    m = outs[k + 1]["metrics"]
+    if family in ("vht", "ozabag"):
+        y = np.asarray(payload["y"][(k + 1) * C])
+        assert float(m["correct"][0]) == float(np.sum(pred == y))
+    elif family == "amrules":
+        y = np.asarray(payload["y"][(k + 1) * C])
+        np.testing.assert_allclose(float(m["abs_err"][0]),
+                                   float(np.sum(np.abs(y - pred))),
+                                   rtol=1e-5)
+    else:   # clustream: the step's ssq reads the same macro centers
+        from repro.ml.clustream import pairwise_d2
+        d2 = np.asarray(pairwise_d2(jnp.asarray(x), snap.state["macro"]))
+        np.testing.assert_allclose(float(m["ssq"][0]),
+                                   float(d2.min(axis=-1).sum()), rtol=1e-5)
+
+
+# ------------------------------------------------------------- publisher
+
+def test_model_state_of_unwraps_single_processor_carry():
+    state = {"w": jnp.ones((2,))}
+    carry = {"states": {"vht": state}, "feedback": None}
+    assert model_state_of(carry) is state
+    assert model_state_of(state) is state       # raw states pass through
+
+
+def test_publisher_rejects_non_finite_keeps_last_good():
+    pub = SnapshotPublisher()
+    good = {"w": jnp.ones((3,)), "n": jnp.arange(3)}
+    assert pub.publish(0, good)
+    bad = {"w": jnp.array([1.0, float("nan"), 2.0]), "n": jnp.arange(3)}
+    assert not pub.publish(1, bad)
+    snap = pub.current()
+    assert snap.version == 1 and snap.chunk_index == 0
+    assert pub.rejected_snapshots == 1
+    # training progress was still observed: the reject costs freshness
+    assert pub.staleness() == 1
+    assert ("reject", 1, "non_finite") in pub.events
+
+
+def test_publisher_rejects_structure_roundtrip_failure():
+    pub = SnapshotPublisher()
+    odict = collections.OrderedDict([("w", jnp.ones((2,)))])
+    assert not pub.publish(0, odict)    # manifest cannot round-trip it
+    assert pub.current() is None
+    assert ("reject", 0, "structure") in pub.events
+
+
+def test_publisher_double_buffer_immune_to_writer_mutation():
+    pub = SnapshotPublisher()
+    state = {"w": np.ones((4,), np.float32)}
+    assert pub.publish(0, state)
+    state["w"][:] = -77.0               # training mutates its buffer
+    np.testing.assert_array_equal(np.asarray(pub.current().state["w"]),
+                                  np.ones((4,), np.float32))
+
+
+def test_publisher_breaker_trips_after_consecutive_rejects_and_heals():
+    pub = SnapshotPublisher(breaker_threshold=2)
+    good = {"w": jnp.ones((2,))}
+    bad = {"w": jnp.array([float("inf"), 0.0])}
+    assert pub.publish(0, good)
+    assert not pub.publish(1, bad)
+    assert not pub.breaker_open         # 1 consecutive < threshold
+    assert not pub.publish(2, bad)
+    assert pub.breaker_open and pub.breaker_trips == 1
+    assert pub.degraded()               # breaker forces degraded
+    assert pub.publish(3, good)         # heals without restart
+    assert not pub.breaker_open
+    assert not pub.degraded()
+    assert pub.consecutive_rejections == 0
+
+
+def test_publisher_staleness_slo_flips_degraded_and_recovers():
+    pub = SnapshotPublisher(max_staleness_chunks=2)
+    good = {"w": jnp.ones((2,))}
+    assert pub.degraded()               # nothing published yet
+    assert pub.publish(0, good)
+    assert not pub.degraded()
+    for i in range(1, 3):
+        pub.observe(i)                  # publisher stalled, training runs
+    assert pub.staleness() == 2 and not pub.degraded()   # at the SLO edge
+    pub.observe(3)
+    assert pub.staleness() == 3 and pub.degraded()       # SLO blown
+    assert pub.publish(4, good)         # stall ends: fresh again
+    assert pub.staleness() == 0 and not pub.degraded()
+
+
+def test_publisher_spills_accepted_snapshots_to_checkpoint(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    pub = SnapshotPublisher(checkpoint=mgr)
+    state = {"w": jnp.arange(4, dtype=jnp.float32)}
+    assert pub.publish(2, state)
+    blob, step = mgr.restore_structured()
+    assert step == 2
+    np.testing.assert_array_equal(blob["w"],
+                                  np.arange(4, dtype=np.float32))
+
+
+# -------------------------------------------------- serve/train parity
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_snapshot_predict_parity_fixed_boundary(family):
+    _assert_serve_train_parity(family, 1)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(family=st.sampled_from(FAMILIES),
+           k=st.integers(min_value=0, max_value=N_CHUNKS - 2))
+    def test_snapshot_predict_parity_property(family, k):
+        """A snapshot published at a RANDOM chunk boundary predicts
+        bit-identically to the training loop at that step, across all
+        four learner families."""
+        _assert_serve_train_parity(family, k)
+except ImportError:             # pragma: no cover - hypothesis optional
+    pass
+
+
+# ------------------------------------------------------------- server
+
+def _served_publisher(family="vht"):
+    pub = SnapshotPublisher()
+    assert pub.publish(0, _fresh_state(family))
+    return pub
+
+
+def test_microbatch_flushes_at_max_batch():
+    pub = _served_publisher()
+    srv = ModelServer(LEARNERS["vht"], pub,
+                      ServeConfig(max_batch=4, max_wait_ms=10_000.0,
+                                  queue_limit=16, deadline_ms=60_000.0))
+    try:
+        xs = np.asarray(XS[0][:4])
+        reqs = [srv.submit(x) for x in xs]
+        for r in reqs:
+            r.result(timeout=10)        # << max_wait: size triggered it
+        assert all(r.status == "answered" for r in reqs)
+        assert all(r.meta["batch_size"] == 4 for r in reqs)
+    finally:
+        srv.stop()
+
+
+def test_microbatch_flushes_at_max_wait():
+    pub = _served_publisher()
+    srv = ModelServer(LEARNERS["vht"], pub,
+                      ServeConfig(max_batch=64, max_wait_ms=30.0,
+                                  queue_limit=128, deadline_ms=60_000.0))
+    try:
+        reqs = [srv.submit(np.asarray(XS[0][i])) for i in range(2)]
+        for r in reqs:
+            r.result(timeout=10)        # flushed far below max_batch
+        assert all(r.status == "answered" for r in reqs)
+        assert all(r.meta["batch_size"] == 2 for r in reqs)
+    finally:
+        srv.stop()
+
+
+def test_admission_control_bounded_queue_explicit_overload():
+    pub = _served_publisher()
+    srv = ModelServer(LEARNERS["vht"], pub,
+                      ServeConfig(max_batch=8, max_wait_ms=1.0,
+                                  queue_limit=6, deadline_ms=60_000.0),
+                      start=False)      # no dispatcher: queue must bound
+    reqs = [srv.submit(np.asarray(XS[0][i % B])) for i in range(10)]
+    over = [r for r in reqs if r.status == "overloaded"]
+    assert len(over) == 4               # 6 admitted, 4 rejected, zero wait
+    assert all(r.done() for r in over)
+    assert srv.max_queue_depth <= 6
+    srv.start()
+    for r in reqs:
+        r.result(timeout=10)
+    st = srv.status()
+    assert st["answered"] == 6 and st["rejected_overloaded"] == 4
+    assert st["submitted"] == st["answered"] + st["rejected_overloaded"]
+    assert st["pending"] == 0 and st["accounting_ok"]
+    srv.stop()
+
+
+def test_deadline_expired_requests_are_shed_not_answered():
+    pub = _served_publisher()
+    srv = ModelServer(LEARNERS["vht"], pub,
+                      ServeConfig(max_batch=8, max_wait_ms=1.0,
+                                  queue_limit=16, deadline_ms=60_000.0),
+                      start=False)
+    dead = [srv.submit(np.asarray(XS[0][i]), deadline_ms=0.0)
+            for i in range(3)]
+    live = [srv.submit(np.asarray(XS[0][i])) for i in range(3, 5)]
+    time.sleep(0.01)                    # let the deadlines expire
+    srv.start()
+    for r in dead + live:
+        r.result(timeout=10)
+    assert [r.status for r in dead] == ["shed"] * 3
+    assert all(r.meta["reason"] == "deadline_expired" for r in dead)
+    assert [r.status for r in live] == ["answered"] * 2
+    st = srv.status()
+    assert st["shed"] == 3 and st["answered"] == 2 and st["accounting_ok"]
+    srv.stop()
+
+
+def test_requests_before_first_snapshot_rejected_unavailable():
+    pub = SnapshotPublisher()           # nothing ever published
+    srv = ModelServer(LEARNERS["vht"], pub, ServeConfig())
+    try:
+        r = srv.submit(np.asarray(XS[0][0]))
+        assert r.done() and r.status == "unavailable"
+        assert r.meta["reason"] == "no_snapshot"
+        assert srv.status()["rejected_unavailable"] == 1
+    finally:
+        srv.stop()
+
+
+def test_answers_report_staleness_and_degraded_truthfully():
+    pub = SnapshotPublisher(max_staleness_chunks=1)
+    assert pub.publish(0, _fresh_state("vht"))
+    for i in range(1, 4):
+        pub.observe(i)                  # stalled publisher, training at 3
+    srv = ModelServer(LEARNERS["vht"], pub,
+                      ServeConfig(max_batch=4, max_wait_ms=5.0))
+    try:
+        r = srv.submit(np.asarray(XS[0][0])).result(timeout=10)
+        assert r.status == "answered"
+        assert r.meta["staleness_chunks"] == 3
+        assert r.meta["degraded"] is True
+        assert r.meta["snapshot_version"] == 1
+        assert srv.status()["degraded_answers"] == 1
+    finally:
+        srv.stop()
+
+
+# ------------------------------------------------------- chaos: burst
+
+def test_request_burst_10x_bounded_queue_exact_accounting():
+    pub = _served_publisher()
+    cfg = ServeConfig(max_batch=8, max_wait_ms=1.0, queue_limit=16,
+                      deadline_ms=60_000.0)
+    srv = ModelServer(LEARNERS["vht"], pub, cfg)
+    try:
+        rng = np.random.default_rng(0)
+        xs = rng.integers(0, 8, (10 * cfg.queue_limit, 12)).astype(np.int32)
+        reqs = request_burst(srv, xs)
+        for r in reqs:
+            r.result(timeout=30)
+        st = srv.status()
+        # every request resolved, truthfully: answered or explicitly
+        # rejected -- nothing silently dropped, nothing unbounded
+        assert st["submitted"] == len(reqs)
+        assert st["submitted"] == (st["answered"] + st["shed"]
+                                   + st["rejected_overloaded"]
+                                   + st["rejected_unavailable"])
+        assert st["pending"] == 0 and st["accounting_ok"]
+        assert st["max_queue_depth"] <= cfg.queue_limit
+        assert st["answered"] >= cfg.queue_limit     # real work got through
+        answered = [r for r in reqs if r.status == "answered"]
+        over = [r for r in reqs if r.status == "overloaded"]
+        assert len(answered) == st["answered"]
+        assert len(over) == st["rejected_overloaded"]
+        for r in answered:
+            assert np.all(np.isfinite(np.asarray(r.pred, np.float64)))
+    finally:
+        srv.stop()
+
+
+# ------------------------------------- chaos: poisoned snapshots, stall
+
+def test_poison_snapshot_rejected_training_untouched():
+    """A NaN'd snapshot must never reach readers -- and must not disturb
+    the training run it was captured from."""
+    inj = FaultInjector(poison_snapshot_at_chunk=1)
+    pub = SnapshotPublisher()
+    ev = ChunkedPrequentialEvaluation(
+        LEARNERS["vht"], _vht_stream(), engine=ENGINES["vht"],
+        publisher=inj.wrap_publisher(pub), check_finite=False)
+    res = ev.run(resume=False)
+    assert pub.rejected_snapshots == 1
+    assert inj.snapshot_poisoned
+    # every healthy boundary published; the final snapshot is fresh
+    assert pub.published == N_CHUNKS - 1
+    assert pub.current().chunk_index == N_CHUNKS - 1
+    assert pub.staleness() == 0 and not pub.degraded()
+    assert res.extra["report"]["snapshots"]["rejected_snapshots"] == 1
+    # the training carry itself stayed finite and identical to a clean run
+    carries, _ = _trace("vht")
+    la = jax.tree.leaves(res.extra["carry"])
+    lb = jax.tree.leaves(carries[-1])
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_publisher_stall_degrades_then_recovers_while_serving():
+    """End-to-end: train in one thread (publisher stalled mid-stream),
+    serve in another.  During the stall the server keeps answering from
+    last-good (finite, flagged degraded); when the publisher heals the
+    degraded flag clears without restart."""
+    inj = FaultInjector(stall_publish_chunks=(1, 2))
+    for i in range(N_CHUNKS):
+        inj.delay_chunk(i, 0.05)        # stretch the run so serving
+                                        # overlaps every publication phase
+    pub = SnapshotPublisher(max_staleness_chunks=1)
+    ev = ChunkedPrequentialEvaluation(
+        LEARNERS["vht"], _vht_stream(), engine=ENGINES["vht"],
+        publisher=inj.wrap_publisher(pub), injector=inj,
+        check_finite=False)
+    srv = ModelServer(LEARNERS["vht"], pub,
+                      ServeConfig(max_batch=8, max_wait_ms=2.0,
+                                  queue_limit=64, deadline_ms=60_000.0))
+    done = threading.Event()
+    result = {}
+
+    def train():
+        try:
+            result["res"] = ev.run(resume=False)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=train, daemon=True)
+    t.start()
+    reqs, degraded_seen = [], []
+    while not done.is_set():
+        reqs.append(srv.submit(np.asarray(XS[0][len(reqs) % B])))
+        degraded_seen.append(pub.degraded())
+        time.sleep(0.002)
+    t.join(timeout=60)
+    for r in reqs:
+        r.result(timeout=30)
+    srv.stop()
+
+    assert inj.stalled_publishes == 2
+    # the stall blew the staleness SLO mid-run...
+    assert any(degraded_seen)
+    # ...and healed without restart: the final boundary published fresh
+    assert not pub.degraded()
+    assert pub.current().chunk_index == N_CHUNKS - 1
+    assert pub.rejected_snapshots == 0
+    # stale-but-finite answers throughout; exact accounting
+    st = srv.status()
+    assert st["pending"] == 0 and st["accounting_ok"]
+    assert st["submitted"] == (st["answered"] + st["shed"]
+                               + st["rejected_overloaded"]
+                               + st["rejected_unavailable"])
+    for r in reqs:
+        if r.status == "answered":
+            assert np.all(np.isfinite(np.asarray(r.pred, np.float64)))
+    # training result unaffected by the serving machinery
+    carries, _ = _trace("vht")
+    la = jax.tree.leaves(result["res"].extra["carry"])
+    lb = jax.tree.leaves(carries[-1])
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -------------------------------------------------------- satellites
+
+def test_checkpoint_manager_sweeps_stale_tmp_dirs(tmp_path):
+    (tmp_path / "tmp.3.12345").mkdir(parents=True)
+    (tmp_path / "tmp.3.12345" / "tensors.npz").write_bytes(b"torn")
+    (tmp_path / "tmp.7.99").mkdir()
+    keepme = tmp_path / "step_0000000003"
+    keepme.mkdir()
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    assert mgr.swept_tmp == 2
+    assert not list(tmp_path.glob("tmp.*"))
+    assert keepme.exists()              # real checkpoints untouched
+    # a clean directory sweeps nothing
+    assert CheckpointManager(tmp_path / "fresh").swept_tmp == 0
+
+
+def test_retry_events_ring_buffer_caps_with_exact_count():
+    fails = {i: 2 for i in range(4)}    # 8 retries total
+
+    def flaky(i):
+        if fails.get(i, 0) > 0:
+            fails[i] -= 1
+            raise TransientSourceError(f"flap {i}")
+        return {"x": jnp.zeros((1, 2))}
+
+    s = ChunkedStream.from_fn(flaky, n_chunks=4, chunk_len=1,
+                              retries=3, backoff=1e-4, backoff_cap=1e-4,
+                              retry_events_cap=3, to_device=False)
+    for _ in s:
+        pass
+    assert s.retry_count == 8           # exact, unaffected by the cap
+    assert len(s.retry_events) == 3     # ring keeps only the newest
+    assert s.retry_events_dropped == 5
+    # the newest three events: chunk 2's second retry, chunk 3's both
+    assert [(c, a) for c, a, _, _ in s.retry_events] == \
+        [(2, 2), (3, 1), (3, 2)]
+
+
+def test_evaluation_report_retry_count_stays_exact_past_cap():
+    inj = FaultInjector(flaky_chunks=(0, 1, 2), flaky_failures=1)
+    base = _vht_stream()
+    stream = ChunkedStream.from_fn(
+        inj.wrap_fetch(base._fetch), n_chunks=base.n_chunks, chunk_len=C,
+        retries=2, backoff=1e-4, backoff_cap=1e-4, retry_events_cap=2)
+    ev = ChunkedPrequentialEvaluation(LEARNERS["vht"], stream,
+                                      engine=ENGINES["vht"])
+    res = ev.run(resume=False)
+    rep = res.extra["report"]
+    assert rep["source_retry_count"] == 3
+    assert len(rep["source_retries"]) == 2
+    assert rep["source_retries_dropped"] == 1
+
+
+def test_delay_chunk_fires_once_and_is_visible_in_duration():
+    inj = FaultInjector()
+    assert inj.delay_chunk(1, 0.15) is inj
+    t0 = time.perf_counter()
+    inj.maybe_delay(0)
+    assert time.perf_counter() - t0 < 0.1       # unscheduled: no sleep
+    t0 = time.perf_counter()
+    inj.maybe_delay(1)
+    assert time.perf_counter() - t0 >= 0.15     # scheduled sleep
+    t0 = time.perf_counter()
+    inj.maybe_delay(1)
+    assert time.perf_counter() - t0 < 0.1       # latched: fires once
+
+
+def test_delayed_evaluation_bit_identical_to_clean_run():
+    inj = FaultInjector()
+    inj.delay_chunk(0, 0.05).delay_chunk(2, 0.05)
+    ev = ChunkedPrequentialEvaluation(
+        LEARNERS["vht"], _vht_stream(), engine=ENGINES["vht"],
+        injector=inj, check_finite=False)
+    res = ev.run(resume=False)
+    assert inj.delays_fired == {0, 2}
+    carries, _ = _trace("vht")
+    la = jax.tree.leaves(res.extra["carry"])
+    lb = jax.tree.leaves(carries[-1])
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
