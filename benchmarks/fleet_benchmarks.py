@@ -1,0 +1,197 @@
+"""Multi-tenant fleet benchmark: F >= 1000 learners as ONE compiled
+program -> BENCH_fleet.json.
+
+The ``fleet.vht-f1000`` arm packs 1000 independent VHT tenants (each on
+its own stream) into a single ``LearnerFleet`` and drives them through
+the chunked prequential runtime.  Three properties are asserted LOUDLY
+(the harness raises; a silently-wrong fleet number is worse than none):
+
+  * **per-tenant bit-parity** -- every tenant's accuracy column AND final
+    state row must equal that tenant's own single-learner run, bit for
+    bit, for all F tenants;
+  * **kill/resume exactness** -- the run is checkpointed at chunk
+    boundaries, later checkpoints are deleted ("kill"), and the resumed
+    run must reproduce the uninterrupted packed carry and [F] metric
+    vector exactly;
+  * **accounting** -- per-tenant cursors must all equal the stream length.
+
+Reported: fleet wall/throughput (one vmapped scan for all tenants) vs the
+F-separate-runs wall (one scan dispatch per tenant), and the resulting
+consolidation speedup -- the "thousands of models, one program" number.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.engines import JitEngine
+from repro.core.evaluation import ChunkedPrequentialEvaluation
+from repro.data.generators import RandomTreeGenerator, bin_numeric
+from repro.data.pipeline import ChunkedStream
+from repro.ml.fleet import LearnerFleet
+from repro.ml.htree import TreeConfig
+from repro.ml.vht import VHT, VHTConfig
+
+ROWS = []
+BENCH = {}    # structured fleet numbers -> BENCH_fleet.json
+
+N_BINS = 4
+TC = TreeConfig(n_attrs=8, n_bins=N_BINS, n_classes=2, max_nodes=31,
+                n_min=16, delta=0.05, tau=0.1)
+
+
+def emit(name, us_per_call, derived):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _fleet_payload(n_tenants, t, batch):
+    """[T, F, B, ...] per-tenant streams in ONE vmapped generation pass
+    (F*T sequential host-side draws would dwarf the benchmark)."""
+    gen = RandomTreeGenerator(n_cat=4, n_num=4, depth=4, seed=3)
+    keys = jax.random.split(jax.random.PRNGKey(11), t * n_tenants)
+    xs, ys = jax.vmap(lambda k: gen.sample(k, batch))(keys)
+    xs = bin_numeric(xs, N_BINS)
+    return {"x": xs.reshape(t, n_tenants, batch, -1),
+            "y": ys.reshape(t, n_tenants, batch)}
+
+
+def _assert_identical(a, b, what):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree.leaves(b)
+    for (path, x), y in zip(la, lb):
+        if not np.array_equal(np.asarray(x), np.asarray(y)):
+            raise RuntimeError(f"fleet parity broken: {what}{path} "
+                               "differs from the reference")
+
+
+def fleet_vht(fast=True):
+    n_tenants = 1000
+    t, batch, chunk_len = (4, 4, 2) if fast else (8, 16, 2)
+    key = jax.random.PRNGKey(0)
+
+    learner = VHT(VHTConfig(TC))
+    fleet = LearnerFleet(learner, n_tenants)
+    feng = JitEngine()      # shared: chunk programs compile once
+    payload = _fleet_payload(n_tenants, t, batch)
+    stream = lambda: ChunkedStream(payload, chunk_len, to_device=False)
+
+    # ---- fleet run (checkpointed) + kill/resume exactness --------------
+    ckpt_dir = pathlib.Path(tempfile.mkdtemp(prefix="bench_fleet_"))
+    try:
+        mgr = CheckpointManager(ckpt_dir, keep=0, async_write=False)
+        ev = ChunkedPrequentialEvaluation(fleet, stream(), engine=feng,
+                                          checkpoint=mgr,
+                                          checkpoint_every=1, key=key)
+        res = ev.run(resume=False)
+        carry = res.extra["carry"]
+        packed = carry["states"]["learnerfleet"]
+        metric = np.asarray(res.metric)
+        if metric.shape != (n_tenants,):
+            raise RuntimeError(f"expected [{n_tenants}] per-tenant metric "
+                               f"columns, got shape {metric.shape}")
+        if not np.array_equal(np.asarray(packed["cursor"]),
+                              np.full((n_tenants,), t)):
+            raise RuntimeError("per-tenant cursors out of step with the "
+                               f"{t}-step stream")
+
+        # kill: drop everything after the first checkpoint, resume, and
+        # demand the uninterrupted run back bit-for-bit
+        for s in mgr.all_steps():
+            if s > 1:
+                shutil.rmtree(ckpt_dir / f"step_{s:010d}")
+        resumed = ChunkedPrequentialEvaluation(
+            fleet, stream(), engine=feng,
+            checkpoint=CheckpointManager(ckpt_dir, keep=0,
+                                         async_write=False),
+            checkpoint_every=10 ** 9, key=key)
+        r2 = resumed.run(resume=True)
+        if not np.array_equal(np.asarray(r2.metric), metric):
+            raise RuntimeError("resumed fleet metrics differ from the "
+                               "uninterrupted run")
+        _assert_identical(carry, r2.extra["carry"], "resume:")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    # ---- timed fleet run: warm programs, no checkpoint I/O -------------
+    ev3 = ChunkedPrequentialEvaluation(fleet, stream(), engine=feng,
+                                       key=key)
+    t0 = time.perf_counter()
+    res3 = ev3.run(resume=False)
+    fleet_dt = time.perf_counter() - t0
+    if not np.array_equal(np.asarray(res3.metric), metric):
+        raise RuntimeError("re-run fleet metrics are not deterministic")
+
+    # ---- F separate runs: the oracle AND the consolidation baseline ----
+    eng = JitEngine()
+    tenant_keys = fleet.tenant_keys(jax.random.split(key, 1)[0])
+    host_x = np.asarray(payload["x"])
+    host_y = np.asarray(payload["y"])
+
+    def separate(f):
+        c = eng.init(learner, key)
+        name = next(iter(c["states"]))
+        c["states"][name] = learner.init(tenant_keys[f])
+        return eng.run_stream(learner, c, {
+            "x": jnp.asarray(host_x[:, f]), "y": jnp.asarray(host_y[:, f])})
+
+    separate(0)                                     # compile outside timing
+    t0 = time.perf_counter()
+    mismatched = 0
+    sep_acc = np.zeros((n_tenants,))
+    for f in range(n_tenants):
+        c, outs = separate(f)
+        m = outs["metrics"]
+        sep_acc[f] = float(m["correct"].sum()) / float(m["seen"].sum())
+        if sep_acc[f] != metric[f]:
+            mismatched += 1
+        if f % 97 == 0:       # full state bit-parity on a stride of rows
+            _assert_identical(next(iter(c["states"].values())),
+                              fleet.tenant_state(packed, f),
+                              f"tenant {f} state:")
+    sep_dt = time.perf_counter() - t0
+    if mismatched:
+        bad = [f for f in range(n_tenants) if sep_acc[f] != metric[f]][:10]
+        raise RuntimeError(
+            f"fleet parity broken: {mismatched}/{n_tenants} tenants' "
+            f"accuracy differs from their separate runs (first: {bad})")
+
+    inst = n_tenants * t * batch
+    tag = f"vht-f{n_tenants}"
+    BENCH[f"fleet.{tag}"] = {
+        "n_tenants": n_tenants, "steps": t, "batch": batch,
+        "chunk_len": chunk_len, "instances": inst,
+        "fleet_wall_s": fleet_dt,
+        "fleet_inst_per_s": inst / fleet_dt,
+        "separate_wall_s": sep_dt,
+        "separate_inst_per_s": inst / sep_dt,
+        "consolidation_speedup": sep_dt / fleet_dt,
+        "per_tenant_parity": "bit_identical",
+        "kill_resume": "bit_identical",
+        "acc_mean": float(metric.mean()),
+        "acc_min": float(metric.min()),
+        "acc_max": float(metric.max()),
+    }
+    emit(f"fleet.{tag}", fleet_dt * 1e6 / (t // chunk_len),
+         f"tenants={n_tenants};inst_per_s={inst / fleet_dt:.0f};"
+         f"separate_inst_per_s={inst / sep_dt:.0f};"
+         f"speedup={sep_dt / fleet_dt:.1f}x;"
+         f"acc_mean={metric.mean():.3f};parity=bit;resume=bit")
+
+
+def main(fast=True):
+    fleet_vht(fast)
+    return ROWS
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,7 @@ and OzaBag with its member axis over 'data' -- merging the resulting
 ``sharded.*`` arms into the existing BENCH json instead of replacing it.
 
   PYTHONPATH=src python -m benchmarks.run [--full|--fast] [--sharded] \
-      [--only vht|amrules|clustream|ensemble|lm|kernels|serving]
+      [--only vht|amrules|clustream|ensemble|lm|kernels|serving|fleet]
 """
 
 from __future__ import annotations
@@ -54,8 +54,9 @@ def main() -> None:
                      "its backends; run in a fresh process")
 
     from benchmarks import (amrules_benchmarks, clustream_benchmarks,
-                            ensemble_benchmarks, kernel_benchmarks,
-                            lm_roofline, serving_benchmarks, vht_benchmarks)
+                            ensemble_benchmarks, fleet_benchmarks,
+                            kernel_benchmarks, lm_roofline,
+                            serving_benchmarks, vht_benchmarks)
 
     suites = {
         "vht": vht_benchmarks,
@@ -65,6 +66,7 @@ def main() -> None:
         "lm": lm_roofline,
         "kernels": kernel_benchmarks,
         "serving": serving_benchmarks,
+        "fleet": fleet_benchmarks,
     }
     if args.sharded:
         suites = {k: v for k, v in suites.items()

@@ -105,44 +105,70 @@ class MetricAccumulator:
     """
 
     def __init__(self):
+        # scalars for single-learner runs; [F] per-tenant columns when the
+        # metrics carry a trailing fleet axis (LearnerFleet runs) -- one
+        # column per tenant, so no tenant's metrics ever mix
         self.correct = 0.0
         self.abs_err = 0.0
         self.seen = 0.0
-        self.curve: list[float] = []
+        self.curve: list = []
 
     def update(self, metrics):
-        """Fold in one chunk's stacked metrics dict (leaves [steps, ...])."""
+        """Fold in one chunk's stacked metrics dict.
+
+        Leaves are ``[steps]`` (single learner) or ``[steps, F]`` (fleet:
+        one column per tenant).  A step that contributes zero weight (an
+        all-padding tail, an exhausted tenant) CARRIES THE PRIOR curve
+        value forward instead of dividing by zero -- a spurious 0.0 dip
+        would misreport a perfectly healthy stream."""
         seen = np.asarray(metrics["seen"], np.float64)
-        corr = np.asarray(metrics.get("correct", np.zeros_like(seen)),
-                          np.float64)
-        abse = np.asarray(metrics.get("abs_err", np.zeros_like(seen)),
-                          np.float64)
-        self.correct += float(corr.sum())
-        self.abs_err += float(abse.sum())
-        self.seen += float(seen.sum())
-        per = np.where(seen > 0, (np.where(corr > 0, corr, -abse)) /
-                       np.maximum(seen, 1e-9), 0.0)
-        self.curve.extend(float(v) for v in per)
+        zeros = np.zeros_like(seen)
+        corr = np.asarray(metrics.get("correct", zeros), np.float64)
+        abse = np.asarray(metrics.get("abs_err", zeros), np.float64)
+        self.correct = self.correct + corr.sum(axis=0)
+        self.abs_err = self.abs_err + abse.sum(axis=0)
+        self.seen = self.seen + seen.sum(axis=0)
+        signed = np.where(corr > 0, corr, -abse)
+        prev = self.curve[-1] if self.curve \
+            else np.zeros(seen.shape[1:], np.float64)
+        for t in range(seen.shape[0]):
+            val = np.where(seen[t] > 0,
+                           signed[t] / np.maximum(seen[t], 1e-9), prev)
+            prev = float(val) if val.ndim == 0 else val
+            self.curve.append(prev)
 
     @property
-    def metric(self) -> float:
-        if not self.seen:
-            return 0.0
-        return (self.correct / self.seen) if self.correct \
-            else (self.abs_err / self.seen)
+    def metric(self):
+        """Running metric: accuracy when correct-counts flowed, MAE
+        otherwise.  A float for single-learner runs, an ``[F]`` vector for
+        fleet runs; zero-weight (tenant) columns report 0.0, never NaN."""
+        if np.ndim(self.seen) == 0:
+            if not self.seen:
+                return 0.0
+            return float(self.correct / self.seen) if self.correct \
+                else float(self.abs_err / self.seen)
+        num = np.where(np.asarray(self.correct) > 0,
+                       self.correct, self.abs_err)
+        return np.where(np.asarray(self.seen) > 0,
+                        num / np.maximum(self.seen, 1e-9), 0.0)
 
     def state(self):
         """Checkpointable pytree of the accumulator."""
-        return {"correct": np.float64(self.correct),
-                "abs_err": np.float64(self.abs_err),
-                "seen": np.float64(self.seen),
+        return {"correct": np.asarray(self.correct, np.float64),
+                "abs_err": np.asarray(self.abs_err, np.float64),
+                "seen": np.asarray(self.seen, np.float64),
                 "curve": np.asarray(self.curve, np.float64)}
 
     def load(self, state):
-        self.correct = float(state["correct"])
-        self.abs_err = float(state["abs_err"])
-        self.seen = float(state["seen"])
-        self.curve = [float(v) for v in np.asarray(state["curve"])]
+        def _num(v):
+            v = np.asarray(v, np.float64)
+            return float(v) if v.ndim == 0 else v
+        self.correct = _num(state["correct"])
+        self.abs_err = _num(state["abs_err"])
+        self.seen = _num(state["seen"])
+        curve = np.asarray(state["curve"], np.float64)
+        self.curve = [float(v) for v in curve] if curve.ndim <= 1 \
+            else [row for row in curve]
         return self
 
 
@@ -333,7 +359,9 @@ class ChunkedPrequentialEvaluation(Task):
                 report["events"].append(("resume", start))
         if carry is None:
             carry = self.engine.init(learner, self.key)
-        seen0 = acc.seen          # restored instances: not processed now
+        # restored instances: not processed now (summed over the fleet
+        # axis when the accumulator keeps per-tenant columns)
+        seen0 = float(np.sum(acc.seen))
 
         check = self.check_finite
         if check is None:       # default: on iff recovery can act on it
@@ -383,7 +411,8 @@ class ChunkedPrequentialEvaluation(Task):
                     acc.update(outs["metrics"])
                     if not timed:
                         jax.block_until_ready(jax.tree.leaves(carry)[0])
-                        timed.append((time.perf_counter(), acc.seen))
+                        timed.append((time.perf_counter(),
+                                      float(np.sum(acc.seen))))
                     if self.publisher is not None:
                         # snapshot publication rides the same boundary as
                         # the metrics/checkpoint: only a carry that passed
@@ -421,10 +450,11 @@ class ChunkedPrequentialEvaluation(Task):
         jax.block_until_ready(jax.tree.leaves(carry)[0])
         t_end = time.perf_counter()
         wall = max(t_end - t0, 1e-9)
-        if len(timed) == 0 or acc.seen == timed[0][1]:
-            thr = (acc.seen - seen0) / wall     # single-chunk stream
+        seen_total = float(np.sum(acc.seen))
+        if len(timed) == 0 or seen_total == timed[0][1]:
+            thr = (seen_total - seen0) / wall     # single-chunk stream
         else:
-            thr = (acc.seen - timed[0][1]) / max(t_end - timed[0][0], 1e-9)
+            thr = (seen_total - timed[0][1]) / max(t_end - timed[0][0], 1e-9)
         if self.checkpoint is not None:
             self.checkpoint.wait()
         report["source_retries"] = list(

@@ -200,10 +200,16 @@ class ChunkedStream:
                 f"retry_events_cap must be >= 1, got {retry_events_cap}")
         self.retry_events: collections.deque = collections.deque(
             maxlen=int(retry_events_cap))
-        # shared mutable cell, NOT a plain int: ``starting_at`` views copy
+        # shared mutable cell, NOT plain ints: ``starting_at`` views copy
         # __dict__, and retries observed through a resumed view must count
-        # against the same stream (the deque is already shared by identity)
-        self._retry_stats = {"count": 0}
+        # against the same stream (the deque is already shared by identity).
+        # ``dropped`` lives HERE too -- deriving it per-view as
+        # ``count - len(deque)`` reads two values that are updated
+        # non-atomically, so a concurrent view could observe a torn
+        # (negative / under-reported) drop count.  The lock makes the
+        # append + both counters one atomic transition.
+        self._retry_stats = {"count": 0, "dropped": 0}
+        self._retry_lock = threading.Lock()
         if fetch is not None:
             if n_chunks is None:
                 raise ValueError("from_fn streams need n_chunks")
@@ -263,8 +269,12 @@ class ChunkedStream:
                 rng = np.random.default_rng((int(i) + 1) * 1_000_003
                                             + attempt)
                 delay *= float(rng.uniform(0.5, 1.0))
-                self.retry_events.append((int(i), attempt, delay, repr(e)))
-                self._retry_stats["count"] += 1
+                with self._retry_lock:
+                    if len(self.retry_events) == self.retry_events.maxlen:
+                        self._retry_stats["dropped"] += 1
+                    self.retry_events.append(
+                        (int(i), attempt, delay, repr(e)))
+                    self._retry_stats["count"] += 1
                 time.sleep(delay)
 
     def _produce(self, q, stop):
@@ -317,12 +327,18 @@ class ChunkedStream:
     @property
     def retry_count(self) -> int:
         """Exact number of retried fetches (never capped)."""
-        return self._retry_stats["count"]
+        with self._retry_lock:
+            return self._retry_stats["count"]
 
     @property
     def retry_events_dropped(self) -> int:
-        """Retry events evicted from the ring buffer (count stays exact)."""
-        return self.retry_count - len(self.retry_events)
+        """Retry events evicted from the ring buffer (count stays exact).
+
+        Reads the explicit counter in the shared ``_retry_stats`` cell, so
+        every ``starting_at`` view of the stream reports the same total
+        and a read never races the append/count transition."""
+        with self._retry_lock:
+            return self._retry_stats["dropped"]
 
     def __len__(self):
         return self.n_chunks - self.start_chunk

@@ -3,6 +3,7 @@ from repro.ml.vht import VHT, VHTConfig, ShardingEnsemble
 from repro.ml.amrules import AMRules, HAMR, RulesConfig, VAMR
 from repro.ml.clustream import CluStream, CluStreamConfig
 from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
+from repro.ml.fleet import LearnerFleet, stack_payloads
 
 __all__ = [
     "TreeConfig", "init_tree", "route", "update_stats", "split_gains",
@@ -10,4 +11,5 @@ __all__ = [
     "AMRules", "HAMR", "RulesConfig", "VAMR",
     "CluStream", "CluStreamConfig",
     "EnsembleConfig", "OzaEnsemble",
+    "LearnerFleet", "stack_payloads",
 ]

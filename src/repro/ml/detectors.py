@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import sys
 import warnings
 from functools import partial
 
@@ -76,18 +77,36 @@ class PhEmaConfig:
     decay: float = 0.99       # EMA decay of the error baseline
 
 
+def _shim_stacklevel() -> int:
+    """Stacklevel that points the deprecation warning at the first frame
+    OUTSIDE ``repro.ml`` -- the caller's own line -- whether the legacy
+    kwargs arrive directly (``ph_update(s, x, alpha=...)``) or through
+    wrapper layers (``DetectorBank``/ensemble construction).  A hardcoded
+    level is only right for one call depth and blames the shim itself for
+    every other path."""
+    level = 2                       # _resolve's caller, as warn() counts
+    frame = sys._getframe(2)        # skip _shim_stacklevel + _resolve
+    while frame is not None and frame.f_globals.get(
+            "__name__", "").startswith("repro.ml"):
+        level += 1
+        frame = frame.f_back
+    return level
+
+
 def _resolve(cfg, cls, legacy):
     """Config resolution with the loose-kwargs deprecation shim: kwargs
     that are not None build a config (with a DeprecationWarning); mixing
-    kwargs with an explicit config is an error."""
+    kwargs with an explicit config is an error naming the offenders."""
     given = {k: v for k, v in legacy.items() if v is not None}
     if given:
         if cfg is not None:
             raise TypeError(
-                f"pass either a {cls.__name__} or legacy kwargs, not both")
+                f"pass either a {cls.__name__} or legacy kwargs, not both "
+                f"(got {cls.__name__} AND legacy kwargs {sorted(given)})")
         warnings.warn(
             f"loose detector kwargs {sorted(given)} are deprecated; pass a "
-            f"{cls.__name__} instead", DeprecationWarning, stacklevel=3)
+            f"{cls.__name__} instead", DeprecationWarning,
+            stacklevel=_shim_stacklevel())
         return cls(**given)
     return cfg if cfg is not None else cls()
 
@@ -299,7 +318,7 @@ class DetectorBank:
     bank partition over its owner's mesh axis.
     """
 
-    def __init__(self, family: str, n: int, config=None):
+    def __init__(self, family: str, n: int, config=None, **legacy):
         if family not in FAMILIES:
             raise ValueError(f"unknown detector family {family!r} "
                              f"(available: {', '.join(FAMILIES)})")
@@ -308,7 +327,18 @@ class DetectorBank:
         defaults = {"ph": PageHinkleyConfig, "ddm": DdmConfig,
                     "eddm": EddmConfig, "adwin": AdwinConfig,
                     "ph_ema": PhEmaConfig}
-        self.config = config if config is not None else defaults[family]()
+        cls = defaults[family]
+        if legacy:
+            known = {f.name for f in dataclasses.fields(cls)}
+            unknown = sorted(set(legacy) - known)
+            if unknown:
+                raise TypeError(
+                    f"unknown kwargs {unknown} for detector family "
+                    f"{family!r} (a {cls.__name__} takes {sorted(known)})")
+        # same shim as the scalar update functions: loose kwargs still
+        # work but warn AT THE CALLER (dynamic stacklevel), and mixing
+        # them with an explicit config names the offending kwargs
+        self.config = _resolve(config, cls, legacy)
 
     # -------------------------------------------------------------- state
 

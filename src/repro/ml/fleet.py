@@ -1,0 +1,206 @@
+"""Multi-tenant learner fleets: one compiled program, thousands of models.
+
+The "millions of users" scale story (SAMOA section 2) is not one giant
+model -- it is vast numbers of small per-user/per-cohort learners sharing
+one distributed runtime.  ``LearnerFleet`` generalizes the PR-4
+``DetectorBank`` struct-of-arrays pattern from detectors to WHOLE
+learners: F independent instances of one family (VHT, OzaEnsemble,
+AMRules/VAMR, CluStream) are stacked into packed ``[F, ...]`` state and
+the family step is vmapped over the fleet axis, so the engines' scanned
+drivers compile ONE program per chunk that advances every tenant's model
+at once -- no per-tenant dispatch, no per-tenant compile cache entry.
+
+Semantics
+---------
+  * ``init(key)`` splits the key into ``tenant_keys`` and builds every
+    tenant's state in one vmapped pass; tenant f's row is bit-identical
+    to ``learner.init(tenant_keys(key)[f])`` run on its own.
+  * ``step(state, *args)`` takes per-tenant micro-batches stacked on a
+    fleet axis AFTER the step axis (payload leaves ``[T, F, B, ...]``,
+    see ``stack_payloads``) and returns metrics with an ``[F]`` leaf per
+    key -- ``MetricAccumulator`` keeps them as per-tenant columns, so no
+    tenant's metrics mix.
+  * the fleet carry keeps a per-tenant step ``cursor`` (``[F]`` int32):
+    each tenant's position in its own stream, advanced only on real
+    (unmasked) steps, so a resumed run knows exactly where every tenant
+    stood.
+  * ``state_sharding`` shards the fleet axis over 'data' and composes
+    with the family's own hints shifted one dimension right (AMRules
+    rules -> 'model', CluStream clusters -> 'model'; an inner 'data'
+    assignment -- ensemble members -- yields to the fleet axis, which
+    subsumes it).
+  * bit-parity: every family step is a per-row program (elementwise
+    recurrences, per-tree routing, per-tenant RNG keys), so the vmapped
+    fleet step produces row f bit-identical to running tenant f alone --
+    the property the fleet BENCH arm asserts at F >= 1000.
+
+``stack``/``unstack`` convert between F separate per-tenant states and
+the packed fleet state (checkpoint migration, serving reads); the packed
+state is a plain dict pytree, so ``CheckpointManager.restore_structured``
+round-trips it without a template and kill/resume stays bit-identical.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.ml.amrules import AMRules, HAMR
+from repro.ml.clustream import CluStream
+from repro.ml.clustream import merge as _clustream_merge
+from repro.ml.ensemble import OzaEnsemble
+from repro.ml.vht import VHT
+
+i32 = jnp.int32
+
+#: learner families a fleet can stack (VAMR subclasses AMRules)
+FLEET_FAMILIES = (VHT, OzaEnsemble, AMRules, HAMR, CluStream)
+
+
+def stack_payloads(payloads):
+    """Zip F per-tenant stream payloads into one fleet payload.
+
+    Each input is a payload pytree with leaves ``[T, B, ...]`` (tenant
+    f's stream); the output leaves are ``[T, F, B, ...]`` -- the step
+    axis stays leading so ``ChunkedStream`` chunks the fleet stream
+    exactly like a single-learner one."""
+    payloads = list(payloads)
+    if not payloads:
+        raise ValueError("need at least one tenant payload")
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *payloads)
+
+
+class LearnerFleet:
+    """F independent learners of one family as packed ``[F, ...]`` state."""
+
+    def __init__(self, learner, n_tenants: int):
+        if isinstance(learner, LearnerFleet):
+            raise TypeError("fleets do not nest: pass the base learner")
+        if not isinstance(learner, FLEET_FAMILIES):
+            raise TypeError(
+                f"no fleet support for {type(learner).__name__}; expected "
+                "VHT, OzaEnsemble, AMRules/VAMR, HAMR, or CluStream")
+        if int(n_tenants) < 1:
+            raise ValueError(f"n_tenants must be >= 1, got {n_tenants}")
+        self.learner = learner
+        self.n_tenants = int(n_tenants)
+        # chunk-boundary hook only when the family has one (CluStream in
+        # boundary mode): advertising a no-op would cost every chunk a
+        # jitted dispatch, same reasoning as LearnerProcessor
+        if getattr(learner, "boundary", None) is not None:
+            self.boundary = self._boundary
+
+    # ------------------------------------------------------------- state
+
+    def tenant_keys(self, key):
+        """The per-tenant RNG keys ``init`` uses: tenant f's separate
+        single-learner run must init with row f of this split for
+        fleet-vs-separate bit-parity."""
+        return jax.random.split(key, self.n_tenants)
+
+    def init(self, key=None):
+        key = jax.random.PRNGKey(0) if key is None else key
+        tenant = jax.vmap(self.learner.init)(self.tenant_keys(key))
+        return {"tenant": tenant,
+                "cursor": jnp.zeros((self.n_tenants,), i32)}
+
+    # -------------------------------------------------------------- step
+
+    def step(self, state, *args):
+        """One fleet step: args are per-tenant micro-batches stacked on
+        the leading fleet axis (``x: [F, B, ...]``, ``y: [F, B]``; the
+        engine's scan slices them out of ``[T, F, B, ...]`` payloads).
+        Returns metrics with ``[F]`` leaves -- one column per tenant."""
+        tenant, metrics = jax.vmap(self.learner.step)(state["tenant"], *args)
+        return {"tenant": tenant, "cursor": state["cursor"] + 1}, metrics
+
+    def _boundary(self, state):
+        return {"tenant": jax.vmap(self.learner.boundary)(state["tenant"]),
+                "cursor": state["cursor"]}
+
+    # ------------------------------------------------------------- merge
+
+    def merge(self, states):
+        """Merge shard-local fleet states tenant-by-tenant.
+
+        Delegates to the family merge on the PACKED leaves: additive CF
+        merges are elementwise, so one call reduces every tenant at once.
+        The per-tenant cursors add -- each shard advanced its tenants by
+        the steps it absorbed."""
+        states = list(states)
+        tenants = [s["tenant"] for s in states]
+        fn = getattr(self.learner, "merge", None)
+        if fn is not None:
+            merged = fn(tenants)
+        elif isinstance(self.learner, CluStream):
+            merged = _clustream_merge(tenants)
+        else:
+            raise TypeError(
+                f"{type(self.learner).__name__} has no merge; fleet merge "
+                "is defined only for families with a shard reduction")
+        cursor = sum((s["cursor"] for s in states[1:]), states[0]["cursor"])
+        return {"tenant": merged, "cursor": cursor}
+
+    # ----------------------------------------------------- stack/unstack
+
+    def stack(self, states, *, cursor=None):
+        """Pack F separate per-tenant states into one fleet state."""
+        states = list(states)
+        if len(states) != self.n_tenants:
+            raise ValueError(f"expected {self.n_tenants} tenant states, "
+                             f"got {len(states)}")
+        ref = jax.tree.structure(states[0])
+        for f, s in enumerate(states[1:], 1):
+            if jax.tree.structure(s) != ref:
+                raise ValueError(
+                    f"tenant {f} state structure differs from tenant 0 "
+                    "(fleets stack one family with one config)")
+        tenant = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        if cursor is None:
+            cursor = jnp.zeros((self.n_tenants,), i32)
+        return {"tenant": tenant, "cursor": jnp.asarray(cursor, i32)}
+
+    def unstack(self, state):
+        """The inverse: F separate per-tenant states (cursor dropped --
+        it lives at ``state['cursor']``)."""
+        return [self.tenant_state(state, f) for f in range(self.n_tenants)]
+
+    def tenant_state(self, state, f: int):
+        """One tenant's family state out of the packed fleet state."""
+        if not 0 <= int(f) < self.n_tenants:
+            raise ValueError(f"tenant {f} outside [0, {self.n_tenants})")
+        return jax.tree.map(lambda l: l[f], state["tenant"])
+
+    # ----------------------------------------------------------- sharding
+
+    def state_sharding(self):
+        """ShardMapEngine hints: the fleet axis -- horizontal parallelism
+        over tenants, the paper's shuffle grouping -- shards over 'data';
+        the family's own hints shift one dimension right and compose
+        (rules/clusters stay on 'model').  An inner 'data' assignment
+        (ensemble members) is dropped: the fleet axis subsumes it, and a
+        PartitionSpec may name a mesh axis only once."""
+        one = jax.eval_shape(self.learner.init, jax.random.PRNGKey(0))
+        fn = getattr(self.learner, "state_sharding", None)
+        inner = fn() if fn is not None else None
+
+        def lift(leaf, spec=None):
+            if getattr(leaf, "ndim", 0) < 1:
+                # rank-0 family leaves (clocks, counters) become [F] rows
+                return P("data")
+            parts = tuple(spec) if spec is not None else ()
+            parts = tuple(
+                None if p == "data"
+                or (isinstance(p, tuple) and "data" in p) else p
+                for p in parts)
+            return P("data", *parts)
+
+        if inner is None:
+            tenant = jax.tree.map(lift, one)
+        else:
+            tenant = jax.tree.map(
+                lambda l, s: lift(l, s if isinstance(s, P) else None),
+                one, inner,
+                is_leaf=lambda v: v is None or isinstance(v, P))
+        return {"tenant": tenant, "cursor": P("data")}

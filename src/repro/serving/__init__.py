@@ -1,7 +1,8 @@
 from repro.serving.predict import make_predict_fn, reference_predict
 from repro.serving.server import ModelServer, Request, ServeConfig
-from repro.serving.snapshot import Snapshot, SnapshotPublisher, model_state_of
+from repro.serving.snapshot import (Snapshot, SnapshotPublisher,
+                                    model_state_of, tenant_state_of)
 
 __all__ = ["Snapshot", "SnapshotPublisher", "model_state_of",
-           "make_predict_fn", "reference_predict",
+           "tenant_state_of", "make_predict_fn", "reference_predict",
            "ModelServer", "Request", "ServeConfig"]

@@ -84,14 +84,34 @@ def _clustream_predict(cc):
     return predict
 
 
+def _fleet_predict(base):
+    """Tenant-indexed predict over a packed fleet snapshot.
+
+    ``predict(state, x, tenant)``: x is ``[B, ...]`` model inputs and
+    tenant the ``[B]`` int ids naming whose model answers each row.  Each
+    request's tenant rows are gathered out of the packed ``[F, ...]``
+    state and the family's predict-only fast path runs vmapped over the
+    batch -- one compiled program regardless of which tenants a batch
+    mixes, answering row i exactly as tenant i's model would alone."""
+    def predict(state, x, tenant):
+        rows = jax.tree.map(lambda l: l[tenant], state["tenant"])
+        return jax.vmap(lambda st, xi: base(st, xi[None])[0])(rows, x)
+    return predict
+
+
 def make_predict_fn(learner, *, jit: bool = True):
     """The jitted predict-only fast path for `learner`'s family.
 
     Returns ``f(state, x) -> pred`` where `state` is the learner state (a
     published ``Snapshot.state``) and `x` the batched model input (binned
     int attributes for the tree/rule families, float features for
-    CluStream)."""
-    if isinstance(learner, VHT):
+    CluStream).  For a ``LearnerFleet`` the signature gains a tenant
+    index: ``f(state, x, tenant) -> pred`` routes each row to its
+    tenant's packed model."""
+    from repro.ml.fleet import LearnerFleet
+    if isinstance(learner, LearnerFleet):
+        fn = _fleet_predict(make_predict_fn(learner.learner, jit=False))
+    elif isinstance(learner, VHT):
         fn = _vht_predict(learner.tc)
     elif isinstance(learner, OzaEnsemble):
         fn = _ensemble_predict(learner.ec, learner.tc)
@@ -106,9 +126,22 @@ def make_predict_fn(learner, *, jit: bool = True):
     return jax.jit(fn) if jit else fn
 
 
-def reference_predict(learner, state, x):
+def reference_predict(learner, state, x, tenant=None):
     """Eager oracle prediction -- independent (legacy) implementations
-    where the fast path uses a kernel, the documented formula elsewhere."""
+    where the fast path uses a kernel, the documented formula elsewhere.
+    For a fleet, `tenant` names whose model answers each row and the
+    oracle slices that tenant's state out and answers one row at a
+    time -- no vmap, no gather program shared with the fast path."""
+    from repro.ml.fleet import LearnerFleet
+    if isinstance(learner, LearnerFleet):
+        if tenant is None:
+            raise ValueError("fleet reference_predict needs tenant ids")
+        preds = [
+            reference_predict(learner.learner,
+                              learner.tenant_state(state, int(t)),
+                              jnp.asarray(x)[i][None])[0]
+            for i, t in enumerate(tenant)]
+        return jnp.stack(preds)
     if isinstance(learner, VHT):
         tc = dataclasses.replace(learner.tc, route_impl="fori")
         pred, _ = _htree.predict(state, x, tc)

@@ -68,12 +68,14 @@ class Request:
     chunk, staleness in chunks, degraded flag, latency)."""
 
     __slots__ = ("x", "deadline", "submitted_at", "status", "pred", "meta",
-                 "_done")
+                 "tenant", "_done")
 
-    def __init__(self, x, deadline: float, submitted_at: float):
+    def __init__(self, x, deadline: float, submitted_at: float,
+                 tenant: int | None = None):
         self.x = x
         self.deadline = deadline
         self.submitted_at = submitted_at
+        self.tenant = tenant
         self.status = "pending"
         self.pred: Any = None
         self.meta: dict = {}
@@ -98,10 +100,15 @@ class ModelServer:
         if self.cfg.max_batch < 1 or self.cfg.queue_limit < 1:
             raise ValueError("max_batch and queue_limit must be >= 1")
         self._fn = make_predict_fn(learner)
+        # fleet serving: requests carry a tenant id and the predict fn
+        # routes each row to its tenant's packed model
+        from repro.ml.fleet import LearnerFleet
+        self._fleet = learner if isinstance(learner, LearnerFleet) else None
         self._clock = clock
         self._q: queue.Queue = queue.Queue(maxsize=self.cfg.queue_limit)
         self._lock = threading.Lock()
         self._stop = threading.Event()
+        self._closed = False     # admission gate; see stop()
         self._thread: threading.Thread | None = None
         # accounting: submitted == answered + shed + rejected_overloaded
         #             + rejected_unavailable + pending (queued or in batch)
@@ -122,6 +129,8 @@ class ModelServer:
         if self._thread is not None:
             return
         self._stop.clear()
+        with self._lock:
+            self._closed = False
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="repro-serve-dispatch")
         self._thread.start()
@@ -136,6 +145,13 @@ class ModelServer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        # close admission BEFORE the final drain: submit() enqueues under
+        # the same lock, so a racing request either made it into the queue
+        # (and is resolved by the drain below) or observes _closed and
+        # resolves ``unavailable`` -- it can never land in the queue after
+        # this drain and hang its caller's result() forever
+        with self._lock:
+            self._closed = True
         while True:      # resolve anything still queued: no silent drops
             try:
                 r = self._q.get_nowait()
@@ -145,29 +161,51 @@ class ModelServer:
 
     # ------------------------------------------------------------- submit
 
-    def submit(self, x, *, deadline_ms: float | None = None) -> Request:
+    def submit(self, x, *, deadline_ms: float | None = None,
+               tenant: int | None = None) -> Request:
         """Admit one request (x: one instance's model input, no batch
         axis).  Never blocks: a full queue is an immediate ``overloaded``
-        rejection, no snapshot yet an ``unavailable`` one."""
+        rejection, no snapshot yet an ``unavailable`` one, and a submit
+        that races ``stop()``'s final drain resolves ``unavailable``
+        instead of parking in the dead queue.  Serving a ``LearnerFleet``
+        requires ``tenant`` (which tenant's model answers)."""
+        if self._fleet is not None:
+            if tenant is None:
+                raise ValueError(
+                    "this server serves a LearnerFleet: submit(..., "
+                    "tenant=<id>) is required to route the request")
+            if not 0 <= int(tenant) < self._fleet.n_tenants:
+                raise ValueError(
+                    f"tenant {tenant} outside [0, {self._fleet.n_tenants})")
+            tenant = int(tenant)
+        elif tenant is not None:
+            raise ValueError("tenant routing requires a LearnerFleet")
         now = self._clock()
         dl = self.cfg.deadline_ms if deadline_ms is None else deadline_ms
-        r = Request(np.asarray(x), now + dl / 1e3, now)
+        r = Request(np.asarray(x), now + dl / 1e3, now, tenant=tenant)
         with self._lock:
             self.submitted += 1
-        if self._stop.is_set() and self._thread is None:
-            self._finish(r, SHED, reason="server_stopped")
-            return r
         if self.publisher.current() is None:
             self._finish(r, UNAVAILABLE, reason="no_snapshot")
             return r
-        try:
-            self._q.put_nowait(r)
-        except queue.Full:
-            self._finish(r, OVERLOADED, reason="queue_full")
-            return r
+        # the queue put and the closed-check must be ONE atomic step with
+        # respect to stop(): a request that checked "not stopped" and was
+        # then preempted could otherwise enqueue after the dispatcher's
+        # final drain pass -- never finished, result() hangs forever, and
+        # the accounting invariant breaks with a phantom pending request
+        verdict = None
         with self._lock:
-            self.max_queue_depth = max(self.max_queue_depth,
-                                       self._q.qsize())
+            if self._closed:
+                verdict = (UNAVAILABLE, "server_stopped")
+            else:
+                try:
+                    self._q.put_nowait(r)
+                    self.max_queue_depth = max(self.max_queue_depth,
+                                               self._q.qsize())
+                except queue.Full:
+                    verdict = (OVERLOADED, "queue_full")
+        if verdict is not None:
+            self._finish(r, verdict[0], reason=verdict[1])
         return r
 
     # ---------------------------------------------------------- dispatch
@@ -213,7 +251,14 @@ class ModelServer:
             # the same predict program and garbage could trip finiteness
             # asserts); padded outputs are simply dropped
             xs = np.concatenate([xs, np.repeat(xs[-1:], pad, axis=0)], 0)
-        preds = np.asarray(self._fn(snap.state, jnp.asarray(xs)))
+        if self._fleet is not None:
+            ts = np.asarray([r.tenant for r in live], np.int32)
+            if pad:
+                ts = np.concatenate([ts, np.repeat(ts[-1:], pad)], 0)
+            preds = np.asarray(self._fn(snap.state, jnp.asarray(xs),
+                                        jnp.asarray(ts)))
+        else:
+            preds = np.asarray(self._fn(snap.state, jnp.asarray(xs)))
         stale = max(0, self.publisher.train_cursor - snap.chunk_index)
         degraded = self.publisher.degraded()
         done = self._clock()
@@ -229,6 +274,8 @@ class ModelServer:
                 "latency_ms": (done - r.submitted_at) * 1e3,
                 "batch_size": len(live),
             }
+            if r.tenant is not None:
+                r.meta["tenant"] = r.tenant
             self._finish(r, ANSWERED)
             if degraded:
                 with self._lock:

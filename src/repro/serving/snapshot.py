@@ -70,6 +70,20 @@ def model_state_of(carry):
     return carry
 
 
+def tenant_state_of(state, tenant: int):
+    """One tenant's model out of a published FLEET snapshot.
+
+    A ``LearnerFleet`` publishes its packed ``{"tenant": [F, ...],
+    "cursor": [F]}`` state; readers that want a single tenant's model (a
+    per-tenant export, the serving oracle) slice row ``tenant`` off every
+    packed leaf.  Raises on non-fleet states rather than guessing."""
+    if not (isinstance(state, dict) and "tenant" in state):
+        raise TypeError(
+            "not a fleet snapshot state (no packed 'tenant' leaves); "
+            "single-learner snapshots ARE the model state already")
+    return jax.tree.map(lambda leaf: leaf[int(tenant)], state["tenant"])
+
+
 class SnapshotPublisher:
     """Validated, double-buffered snapshot publication with a circuit
     breaker and a staleness SLO.

@@ -500,3 +500,165 @@ def test_metric_accumulator_state_round_trip():
     assert clone.metric == acc.metric and clone.curve == acc.curve
     clone.update({"seen": jnp.ones((1,)), "abs_err": jnp.ones((1,))})
     assert clone.seen == acc.seen + 1
+
+
+# -------------------- stack/unstack edge cases (satellite) -----------------
+
+def test_stack_outputs_empty_and_single_step():
+    """Degenerate output shapes: an empty LocalEngine run stacks to an
+    empty dict (and unstacks back to an empty list), and a single-step
+    run round-trips with its leading axis of 1 intact."""
+    assert stack_outputs([]) == {}
+    assert unstack_outputs({}) == []
+    one = [{"metrics": {"seen": jnp.float32(64.0),
+                        "correct": jnp.float32(33.0)}}]
+    stacked = stack_outputs(one)
+    assert stacked["metrics"]["seen"].shape == (1,)
+    back = unstack_outputs(stacked)
+    assert len(back) == 1
+    np.testing.assert_array_equal(np.asarray(back[0]["metrics"]["correct"]),
+                                  33.0)
+
+
+def test_stack_unstack_outputs_are_pass_through_on_native_shapes():
+    """stack_outputs on an already-stacked pytree and unstack_outputs on
+    a per-step list are the identity -- parity helpers must be safe to
+    apply to either engine's native output."""
+    stacked = {"metrics": {"seen": jnp.arange(3.0)}}
+    assert stack_outputs(stacked) is stacked
+    steps = [{"metrics": {"seen": jnp.float32(1.0)}}]
+    assert unstack_outputs(steps) is steps
+    round_trip = unstack_outputs(stack_outputs(steps))
+    np.testing.assert_array_equal(
+        np.asarray(round_trip[0]["metrics"]["seen"]), 1.0)
+
+
+# -------------------- MetricAccumulator zero-weight guard (satellite) ------
+
+def test_metric_accumulator_zero_weight_chunk_keeps_prior_metric():
+    """A chunk whose steps carry zero weight (an all-padding tail, an
+    exhausted tenant) must CARRY the prior running metric and curve value
+    forward -- the pre-fix accumulator recorded a spurious 0.0 curve dip
+    for a perfectly healthy stream."""
+    acc = MetricAccumulator()
+    acc.update({"seen": jnp.full((2,), 8.0),
+                "correct": jnp.asarray([6.0, 7.0])})
+    before = acc.metric
+    assert before == 13.0 / 16.0
+    acc.update({"seen": jnp.zeros((2,)), "correct": jnp.zeros((2,))})
+    assert acc.metric == before                  # running metric unmoved
+    assert acc.curve[-2:] == [7.0 / 8.0, 7.0 / 8.0]   # no 0.0 dip
+    # an accumulator that has seen NOTHING reports 0.0, never NaN
+    empty = MetricAccumulator()
+    empty.update({"seen": jnp.zeros((3,)), "abs_err": jnp.zeros((3,))})
+    assert empty.metric == 0.0 and empty.curve == [0.0, 0.0, 0.0]
+    assert not np.isnan(empty.metric)
+
+
+def test_metric_accumulator_zero_weight_column_is_per_tenant():
+    """Fleet columns guard independently: a tenant whose chunk carried no
+    weight keeps ITS prior column while live tenants advance."""
+    acc = MetricAccumulator()
+    acc.update({"seen": jnp.asarray([[4.0, 4.0]]),
+                "correct": jnp.asarray([[2.0, 4.0]])})
+    acc.update({"seen": jnp.asarray([[4.0, 0.0]]),
+                "correct": jnp.asarray([[4.0, 0.0]])})
+    np.testing.assert_array_equal(np.asarray(acc.metric), [0.75, 1.0])
+    np.testing.assert_array_equal(np.asarray(acc.curve[-1]), [1.0, 1.0])
+
+
+# -------------------- shared retry stats across views (satellite) ----------
+
+def test_retry_stats_shared_across_starting_at_views():
+    """``starting_at`` views are windows onto ONE stream: retries observed
+    through a resumed view land in the same ``_retry_stats`` cell, so
+    count/dropped aggregate across views instead of forking per-view."""
+    from repro.data.pipeline import TransientSourceError
+    fails = {i: 1 for i in range(4)}
+
+    def flaky(i):
+        if fails.get(i, 0) > 0:
+            fails[i] -= 1
+            raise TransientSourceError(f"flap {i}")
+        return {"x": jnp.zeros((1, 2))}
+
+    base = ChunkedStream.from_fn(flaky, n_chunks=4, chunk_len=1,
+                                 retries=3, backoff=1e-4, backoff_cap=1e-4,
+                                 retry_events_cap=2, to_device=False)
+    for _ in iter(base.starting_at(0)):      # chunks 0..3: 4 retries
+        pass
+    fails.update({i: 1 for i in range(2, 4)})
+    view = base.starting_at(2)
+    for _ in view:                           # chunks 2..3 again: 2 more
+        pass
+    for s in (base, view):                   # both views see the total
+        assert s.retry_count == 6
+        assert s.retry_events_dropped == 4
+        assert len(s.retry_events) == 2
+    assert base._retry_stats is view._retry_stats
+
+
+def test_retry_stats_no_torn_reads_under_concurrent_views():
+    """Two views of one flaky stream iterated CONCURRENTLY: the dropped
+    counter lives in the shared cell and moves atomically with the ring
+    append, so no interleaving can surface a torn (negative or
+    count-inconsistent) reading -- the pre-fix per-view derivation
+    ``count - len(ring)`` could."""
+    import collections
+    import threading as _threading
+    import time as _time
+    from repro.data.pipeline import TransientSourceError
+    lock = _threading.Lock()
+    budget = {i: 2 for i in range(8)}
+
+    def flaky(i):
+        with lock:
+            if budget.get(i, 0) > 0:
+                budget[i] -= 1
+                raise TransientSourceError(f"flap {i}")
+        return {"x": jnp.zeros((1, 2))}
+
+    base = ChunkedStream.from_fn(flaky, n_chunks=8, chunk_len=1,
+                                 retries=3, backoff=1e-4, backoff_cap=1e-4,
+                                 retry_events_cap=3, to_device=False,
+                                 prefetch=1)
+
+    class SlowDeque(collections.deque):
+        """Widen the append -> counter-update window from nanoseconds to
+        milliseconds so the watcher below reliably lands inside it; the
+        fixed stream holds its lock across the whole transition (readers
+        block), the broken one exposes the half-applied state."""
+        def append(self, item):
+            super().append(item)
+            _time.sleep(0.002)
+
+    base.retry_events = SlowDeque(maxlen=base.retry_events.maxlen)
+    torn = []
+    done = _threading.Event()
+
+    def watch():
+        # dropped FIRST, count second: both counters are monotonic, so a
+        # correct stream can never show dropped > a later count -- while
+        # the pre-fix ``count - len(ring)`` derivation goes negative
+        # between the ring append and the count increment
+        while not done.is_set():
+            d = base.retry_events_dropped
+            c = base.retry_count
+            if d < 0 or d > c:
+                torn.append((c, d))
+
+    watcher = _threading.Thread(target=watch)
+    watcher.start()
+    threads = [_threading.Thread(
+        target=lambda v=base.starting_at(k): [None for _ in v])
+        for k in (0, 4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    done.set()
+    watcher.join()
+    assert torn == []
+    assert base.retry_count == 16 - sum(budget.values())
+    assert base.retry_events_dropped == base.retry_count - len(
+        base.retry_events)

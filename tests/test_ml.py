@@ -386,3 +386,42 @@ def test_hamr_replica_merge_equals_flat_updates():
     np.testing.assert_allclose(np.asarray(sh["d_stats"][..., 0]),
                                np.asarray(sa["d_stats"][..., 0]), atol=1e-4)
     np.testing.assert_allclose(float(sh["d_n"]), float(sa["d_n"]))
+
+
+# ------------------ detector kwargs shim (satellite) ------------------------
+
+def test_detector_shim_warning_points_at_caller_not_the_shim():
+    """The deprecation warning must blame the CALLER's line whatever the
+    call depth -- directly (`ph_update(..., alpha=)`) or through the
+    ``DetectorBank`` wrapper layer.  The pre-fix hardcoded stacklevel was
+    only right for one depth and blamed library internals elsewhere."""
+    with pytest.warns(DeprecationWarning) as rec:
+        detectors.ph_update(detectors.ph_init(), jnp.float32(0.5),
+                            alpha=0.01, lam=5.0)
+    assert rec[0].filename == __file__
+    with pytest.warns(DeprecationWarning) as rec:
+        detectors.DetectorBank("adwin", 4, delta=0.01)
+    assert rec[0].filename == __file__
+    assert "['delta']" in str(rec[0].message)
+
+
+def test_detector_bank_legacy_kwargs_build_the_same_config():
+    with pytest.warns(DeprecationWarning):
+        legacy = detectors.DetectorBank("ph", 3, alpha=0.01, lam=5.0)
+    explicit = detectors.DetectorBank(
+        "ph", 3, detectors.PageHinkleyConfig(alpha=0.01, lam=5.0))
+    assert legacy.config == explicit.config
+
+
+def test_detector_mixing_error_names_offending_kwargs():
+    """Mixing an explicit config with legacy kwargs must NAME the loose
+    kwargs -- 'not both' alone leaves the caller grepping blind through
+    wrapper layers for which argument leaked in."""
+    with pytest.raises(TypeError, match=r"legacy kwargs \['lam'\]"):
+        detectors.ph_update(detectors.ph_init(), jnp.float32(0.5),
+                            detectors.PageHinkleyConfig(), lam=5.0)
+    with pytest.raises(TypeError, match=r"legacy kwargs \['delta'\]"):
+        detectors.DetectorBank("adwin", 4, detectors.AdwinConfig(),
+                               delta=0.01)
+    with pytest.raises(TypeError, match=r"unknown kwargs \['lam'\]"):
+        detectors.DetectorBank("adwin", 4, lam=5.0)

@@ -461,3 +461,62 @@ else:
         assert set(stats.sharding.device_set) <= set(mesh4.devices.flat)
         shard_rows = {s.data.shape[0] for s in stats.addressable_shards}
         assert shard_rows == {RC.max_rules // 4}
+
+    # ------------------------------------------------------------ fleet
+
+    @pytest.mark.parametrize("family", ["vht", "amrules"])
+    def test_fleet_sharded_bit_identical_and_partitioned(family):
+        """A LearnerFleet shards its TENANT axis over 'data': packed state
+        physically lives one-tenant-per-device, and the sharded fleet run
+        is bit-identical to the single-device fleet run.  The fleet mesh
+        puts every device on 'data' (the tenant axis is the scale axis);
+        each tenant's own reductions then stay device-local, which is what
+        keeps AMRules' float statistics bit-stable -- the same reasoning
+        that pins single-learner VAMR to the 'model' axis above."""
+        from repro.data.pipeline import ChunkedStream
+        from repro.ml.fleet import LearnerFleet, stack_payloads
+        from repro.ml.vht import VHT, VHTConfig
+        from repro.ml.amrules import AMRules
+
+        F, T, BF, CL = N_DEVICES, 4, 32, 2
+        learner = (VHT(VHTConfig(ETC)) if family == "vht"
+                   else AMRules(RulesConfig(n_attrs=12, n_bins=8,
+                                            max_rules=16, n_min=100)))
+        fleet = LearnerFleet(learner, F)
+        gen = RandomTreeGenerator(n_cat=6, n_num=6, depth=5, seed=3)
+
+        def tenant_payload(f):
+            key = jax.random.PRNGKey(100 + f)
+            xs, ys = [], []
+            for _ in range(T):
+                key, k = jax.random.split(key)
+                x, y = gen.sample(k, BF)
+                xs.append(bin_numeric(x, 8))
+                ys.append(y)
+            xs, ys = jnp.stack(xs), jnp.stack(ys)
+            if family == "vht":
+                return {"x": xs[:, :, :ETC.n_attrs], "y": ys}
+            return {"x": xs, "y": ys.astype(jnp.float32)}
+
+        payload = stack_payloads([tenant_payload(f) for f in range(F)])
+        stream = lambda: ChunkedStream(payload, CL, to_device=False)
+
+        base = JitEngine()
+        c0 = base.init(fleet, jax.random.PRNGKey(0))
+        c0, o0 = base.run_stream_chunked(fleet, c0, stream())
+
+        mesh = make_stream_mesh("data")
+        eng = ShardMapEngine(mesh)
+        carry = eng.init(fleet, jax.random.PRNGKey(0))
+        packed = carry["states"]["learnerfleet"]
+        lead = packed["tenant"]["stats"]
+        _assert_partitioned(lead, N_DEVICES, F)       # one tenant/device
+        _assert_partitioned(packed["cursor"], N_DEVICES, F)
+
+        carry, outs = eng.run_stream_chunked(fleet, carry, stream())
+        packed = carry["states"]["learnerfleet"]
+        _assert_partitioned(packed["tenant"]["stats"], N_DEVICES, F)
+        np.testing.assert_array_equal(np.asarray(packed["cursor"]),
+                                      np.full((F,), T))
+        _assert_trees_identical(c0["states"], carry["states"])
+        _assert_trees_identical(o0, outs)

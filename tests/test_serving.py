@@ -555,3 +555,64 @@ def test_delayed_evaluation_bit_identical_to_clean_run():
     lb = jax.tree.leaves(carries[-1])
     for x, y in zip(la, lb):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -------------------- submit/stop race (satellite) -------------------------
+
+def test_submit_after_stop_resolves_unavailable_not_pending():
+    """A submit that lands after ``stop()`` must resolve immediately as
+    ``unavailable`` (reason ``server_stopped``) -- never enqueue into the
+    dead queue where no dispatcher will ever finish it."""
+    pub = _served_publisher()
+    srv = ModelServer(LEARNERS["vht"], pub,
+                      ServeConfig(max_batch=4, max_wait_ms=1.0))
+    srv.stop()
+    r = srv.submit(np.asarray(XS[0][0]))
+    assert r.done() and r.status == "unavailable"
+    assert r.meta["reason"] == "server_stopped"
+    assert srv.status()["accounting_ok"]
+
+
+def test_submit_hammering_concurrent_stop_never_hangs():
+    """The race the atomic closed-check closes: threads hammer ``submit``
+    while the main thread calls ``stop()``.  Pre-fix, a submitter that
+    passed the stopped-check and was preempted could enqueue AFTER the
+    final drain -- a forever-pending request (its ``result()`` hangs) and
+    a broken accounting invariant.  Every request must reach a terminal
+    state and the books must reconcile, every round."""
+    for round_ in range(3):
+        pub = _served_publisher()
+        srv = ModelServer(LEARNERS["vht"], pub,
+                          ServeConfig(max_batch=8, max_wait_ms=0.5,
+                                      queue_limit=32, deadline_ms=60_000.0))
+        reqs, lock = [], threading.Lock()
+        go = threading.Event()
+
+        def hammer():
+            go.wait()
+            mine = []
+            for i in range(200):
+                mine.append(srv.submit(np.asarray(XS[0][i % B])))
+            with lock:
+                reqs.extend(mine)
+
+        threads = [threading.Thread(target=hammer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        go.set()
+        time.sleep(0.002 * (round_ + 1))     # vary where stop lands
+        srv.stop(drain=False)
+        for t in threads:
+            t.join()
+
+        terminal = {"answered", "shed", "overloaded", "unavailable"}
+        for r in reqs:
+            r.result(timeout=5)              # pre-fix: hangs right here
+            assert r.status in terminal
+        st = srv.status()
+        assert st["pending"] == 0
+        assert st["accounting_ok"], st
+        assert st["submitted"] == len(reqs) == 800
+        late = srv.submit(np.asarray(XS[0][0]))
+        assert late.status == "unavailable"
+        assert late.meta["reason"] == "server_stopped"
