@@ -178,7 +178,12 @@ def chunked_long_stream(fast=True):
 
     The stream is generator-backed (``ChunkedStream.from_fn``): no
     ``[T, ...]`` payload ever exists anywhere -- chunk k+1 is generated
-    and device_put by the prefetch thread while chunk k's scan runs.  A
+    and device_put by the prefetch thread while chunk k's scan runs, and
+    the (default) pipelined evaluation driver dispatches chunk k+1 before
+    chunk k's result is read back.  Generation runs IN the loop here
+    (unlike the pre-materialized monolithic arms), so it uses the
+    packed-bits ``sample_binned`` path -- the float sampler would spend
+    more time in RNG than the learner spends learning.  A
     memory ceiling guards the claim with a MEASUREMENT: the total bytes
     of live jax arrays (chunk double-buffer + learner state + temps),
     sampled at chunk boundaries during the timed run, must stay under
@@ -199,8 +204,8 @@ def chunked_long_stream(fast=True):
     @jax.jit
     def chunk_payload(i):
         ks = jax.random.split(jax.random.fold_in(key, i), chunk_len)
-        x, y = jax.vmap(lambda k: gen.sample(k, B))(ks)
-        return {"x": bin_numeric(x, 8), "y": y}
+        x, y = jax.vmap(lambda k: gen.sample_binned(k, B))(ks)
+        return {"x": x, "y": y}
 
     probe = chunk_payload(0)
     chunk_bytes = state_bytes(probe)
@@ -277,7 +282,13 @@ def chunked_long_stream(fast=True):
     t_recover = marks[kill_at] - resume_t0
     steady_per_chunk = dt / n_chunks
     largest_mono = max(v["n_batches"] for k, v in BENCH.items()
-                       if not k.startswith("chunked.")) if BENCH else 0
+                       if k.startswith("dense-")) if BENCH else 0
+    # the dispatch-gap headline: chunked-with-in-loop-generation vs the
+    # monolithic pre-materialized dense-200 scan, us-per-batch over
+    # us-per-batch (the ratio the pipelined driver + packed-bits
+    # generation exist to hold down)
+    mono_us = BENCH.get("dense-200", {}).get("after", {}).get("us_per_batch")
+    vs_mono = (dt / n_steps * 1e6) / mono_us if mono_us else None
     BENCH[f"chunked.vht-dense200-c{chunk_len}"] = {
         "n_batches": int(n_steps), "batch": int(B),
         "chunk_len": int(chunk_len),
@@ -290,15 +301,18 @@ def chunked_long_stream(fast=True):
         "memory_ceiling_bytes": int(ceiling),
         "stream_ratio_vs_largest_monolithic":
             (n_steps / largest_mono) if largest_mono else None,
+        "vs_monolithic_dense200": vs_mono,
         "resume_exact": bool(resume_exact),
-        "path": "generator-backed ChunkedStream, per-chunk metric "
-                "reduction, midpoint checkpoint + resume",
+        "path": "generator-backed ChunkedStream (packed-bits generation), "
+                "pipelined driver, per-chunk metric reduction, midpoint "
+                "checkpoint + resume",
     }
     emit(f"chunked.vht-dense200-c{chunk_len}", dt / n_steps * 1e6,
          f"steps={n_steps};thr={res.throughput:.0f}/s;acc={res.metric:.3f};"
          f"resident={live_max[0]/2**20:.0f}MiB;"
          f"monolithic={mono_bytes/2**20:.0f}MiB;compile={compile_s:.1f}s;"
-         f"resume_exact={resume_exact}")
+         + (f"vs_mono={vs_mono:.2f}x;" if vs_mono else "")
+         + f"resume_exact={resume_exact}")
 
     # recovery arm: how long a mid-stream death actually costs.  t_first
     # is restore + recompile + the first replayed chunk; t_recover adds
@@ -328,6 +342,78 @@ def chunked_long_stream(fast=True):
     if not resume_exact:
         raise RuntimeError("checkpoint resume did not reproduce the "
                            "uninterrupted run's metrics")
+
+
+OVERHEAD_GUARD = 1.35     # chunked/monolithic us-per-batch, same data
+
+
+def chunked_overhead(fast=True):
+    """Micro-arm: pure dispatch overhead of the chunked driver.
+
+    The SAME pre-materialized dense-200 stream (generation excluded from
+    both sides, unlike the long-stream arm) runs once as a single
+    monolithic scan and once through the pipelined chunked evaluation;
+    the published number is the chunked/monolithic us-per-batch ratio.
+    This isolates what chunking itself costs -- per-chunk dispatch, the
+    accumulator, the drain thread -- from generation and checkpointing.
+    FAILS LOUDLY above ``OVERHEAD_GUARD`` so the dispatch gap cannot
+    silently regress; part of the --fast CI smoke."""
+    from benchmarks.common import best_of, run_prequential_engine
+    m, B, chunk_len = 200, 512, 50
+    n_steps = 300 if fast else 600
+    half = m // 2
+    gen = RandomTreeGenerator(n_cat=half, n_num=m - half, depth=8)
+    key = jax.random.PRNGKey(11)
+
+    @jax.jit
+    def chunk_payload(i):
+        ks = jax.random.split(jax.random.fold_in(key, i), chunk_len)
+        x, y = jax.vmap(lambda k: gen.sample_binned(k, B))(ks)
+        return {"x": x, "y": y}
+
+    parts = [chunk_payload(jnp.asarray(i))
+             for i in range(n_steps // chunk_len)]
+    xs = jnp.concatenate([p["x"] for p in parts])
+    ys = jnp.concatenate([p["y"] for p in parts])
+    del parts
+    vht = VHT(VHTConfig(_tc(m, split_delay=4)))
+    eng = JitEngine()
+    acc_m, _, dt_mono = best_of(
+        lambda: run_prequential_engine(eng, vht, xs, ys), reps=2)
+
+    def run_chunked():
+        r = ChunkedPrequentialEvaluation(
+            vht, ChunkedStream({"x": xs, "y": ys}, chunk_len),
+            engine=eng).run(resume=False)
+        return r.metric, r.throughput, r.extra["wall_s"]
+
+    run_chunked()                       # warm the chunk programs
+    acc_c, _, dt_chunk = best_of(run_chunked, reps=2)
+    mono_us = dt_mono / n_steps * 1e6
+    chunk_us = dt_chunk / n_steps * 1e6
+    ratio = chunk_us / mono_us
+    BENCH["chunked.overhead"] = {
+        "n_batches": int(n_steps), "batch": int(B),
+        "chunk_len": int(chunk_len),
+        "monolithic_us_per_batch": mono_us,
+        "chunked_us_per_batch": chunk_us,
+        "ratio": ratio,
+        "guard": OVERHEAD_GUARD,
+        "path": "same pre-materialized stream; monolithic scan vs "
+                "pipelined chunked driver",
+    }
+    emit("chunked.overhead", chunk_us,
+         f"mono_us={mono_us:.0f};chunked_us={chunk_us:.0f};"
+         f"ratio={ratio:.2f}x;guard={OVERHEAD_GUARD}x")
+    if acc_c != acc_m:
+        raise RuntimeError(
+            f"chunked driver diverged from the monolithic scan on the "
+            f"same stream: {acc_c} != {acc_m}")
+    if ratio > OVERHEAD_GUARD:
+        raise RuntimeError(
+            f"chunked dispatch overhead {ratio:.2f}x exceeds the "
+            f"{OVERHEAD_GUARD}x guard ({chunk_us:.0f} vs {mono_us:.0f} "
+            "us/batch): the chunk pipeline regressed")
 
 
 def tab34_realworld(fast=True):
@@ -363,5 +449,6 @@ def main(fast=True):
     fig45_parallel_accuracy(fast)
     fig89_speedup(fast)
     chunked_long_stream(fast)      # after fig89: ratio vs largest mono arm
+    chunked_overhead(fast)         # guarded chunked/monolithic micro-arm
     tab34_realworld(fast)
     return ROWS

@@ -106,11 +106,19 @@ def _decode_structure(enc, leaves):
 
 
 class CheckpointManager:
-    def __init__(self, directory, *, keep: int = 3, async_write: bool = True):
+    def __init__(self, directory, *, keep: int = 3, async_write: bool = True,
+                 transfer_async: bool = True):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_write = async_write
+        # move the device->host harvest onto the writer thread too: save()
+        # only ENQUEUES the D2H copies (copy_to_host_async) and returns
+        # without ever synchronizing -- required by the pipelined chunk
+        # driver, whose drain thread must not stall the dispatch loop.
+        # The copies are ordered before any later donating dispatch, and
+        # callers that donate pass stable (copied) carries.
+        self.transfer_async = bool(transfer_async)
         self._thread: threading.Thread | None = None
         self._error: Exception | None = None
         self.swept_tmp = self._sweep_stale_tmp()
@@ -135,22 +143,34 @@ class CheckpointManager:
         """Snapshot `tree` at `step`.  Returns immediately (async)."""
         self.wait()
         leaves, treedef = _flatten(tree)
-        # device -> host (gather across shards); numpy() forces the copy now
-        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        async_now = self.async_write and not blocking
+        if self.transfer_async and async_now:
+            # enqueue the D2H copies without blocking; the writer thread
+            # harvests the (by then usually complete) host values
+            for x in leaves:
+                start = getattr(x, "copy_to_host_async", None)
+                if start is not None:
+                    start()
+            host_leaves = None
+        else:
+            # device -> host (gather across shards); forces the copy now
+            host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
         # self-describing structure: lets restore_structured rebuild the
         # tree with NO template (mid-stream resume of an engine carry whose
         # feedback structure only exists inside a killed process)
-        structure = _encode_structure(tree, len(host_leaves))
+        structure = _encode_structure(tree, len(leaves))
         keypaths = [jax.tree_util.keystr(kp) for kp, _ in
                     jax.tree_util.tree_flatten_with_path(tree)[0]]
 
         def write():
             try:
+                host_arrs = (host_leaves if host_leaves is not None else
+                             [np.asarray(jax.device_get(x)) for x in leaves])
                 tmp = self.dir / f"tmp.{step}.{os.getpid()}"
                 tmp.mkdir(exist_ok=True)
                 # npz cannot persist ml_dtypes (bf16 etc.): store raw bits
                 arrs = {}
-                for i, a in enumerate(host_leaves):
+                for i, a in enumerate(host_arrs):
                     if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
                         a = a.view(np.uint16)
                     arrs[f"t{i}"] = a
@@ -158,7 +178,7 @@ class CheckpointManager:
                 manifest = {
                     "step": step,
                     "time": time.time(),
-                    "n_tensors": len(host_leaves),
+                    "n_tensors": len(host_arrs),
                     "keypaths": keypaths,
                     "structure": structure,
                     "tensors": [
@@ -166,7 +186,7 @@ class CheckpointManager:
                          "dtype": str(a.dtype),
                          "crc": hashlib.md5(np.ascontiguousarray(a).tobytes()
                                             ).hexdigest()}
-                        for i, a in enumerate(host_leaves)
+                        for i, a in enumerate(host_arrs)
                     ],
                 }
                 (tmp / "manifest.json").write_text(json.dumps(manifest))

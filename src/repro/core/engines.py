@@ -230,11 +230,15 @@ class JitEngine(Engine):
     queueing delay).  run_stream fuses the whole micro-batch stream into a
     single jax.lax.scan program with donated carries."""
 
-    def __init__(self, donate: bool = True):
+    def __init__(self, donate: bool = True, fuse_boundary: bool = True):
         self.donate = donate
+        # fuse_boundary=False keeps the chunk scan and the boundary hook as
+        # two dispatches -- the oracle the fused epilogue is tested against
+        self.fuse_boundary = fuse_boundary
         self._compiled: dict[int, Callable] = {}
         self._compiled_scan: dict[int, Callable] = {}
         self._compiled_chunk: dict[int, Callable] = {}
+        self._compiled_chunk_full: dict[tuple, Callable] = {}
         self._compiled_boundary: dict[int, Callable | None] = {}
 
     def _evict_topology(self, topology: Topology):
@@ -242,6 +246,9 @@ class JitEngine(Engine):
         self._compiled_scan.pop(id(topology), None)
         self._compiled_chunk.pop(id(topology), None)
         self._compiled_boundary.pop(id(topology), None)
+        for k in [k for k in self._compiled_chunk_full
+                  if k[0] == id(topology)]:
+            del self._compiled_chunk_full[k]
 
     def init(self, topology: Topology, key):
         states = _init_states(self._as_topology(topology), key)
@@ -419,6 +426,53 @@ class JitEngine(Engine):
             self._compiled_chunk[key] = fn
         return fn
 
+    def _chunk_full_fn(self, topology: Topology, *, fused_boundary: bool,
+                       reducer=None):
+        """The UNMASKED chunk program: every step of a full (un-padded)
+        chunk is real, so the lax.cond validity gate of ``_chunk_scan_fn``
+        is dead weight -- this program scans the plain topology step
+        (identical math, the same body the monolithic ``_scan_fn`` runs)
+        and fuses the per-chunk epilogue into the same dispatch:
+
+          * ``fused_boundary``: the processors' ``boundary()`` hooks run
+            in the program's tail (one dispatch per chunk instead of two);
+            ``fuse_boundary=False`` on the engine keeps the separate
+            boundary dispatch as the bit-identity oracle.
+          * ``reducer``: an output reduction compiled INTO the program, so
+            only the reduced leaves (e.g. the ``[chunk_len]`` metric
+            columns) are ever materialized -- XLA dead-code-eliminates
+            whole unread output streams from the scan.  Must be a STABLE
+            function (module-level, not a per-call lambda: the compiled
+            program is cached on its identity) that commutes with
+            concatenation along the step axis (selection / elementwise).
+        """
+        key = (id(topology), bool(fused_boundary),
+               id(reducer) if reducer is not None else None)
+        fn = self._compiled_chunk_full.get(key)
+        if fn is None:
+            step = self._make_step(topology)
+            boundary = self._make_boundary(topology) if fused_boundary \
+                else None
+
+            def chunk_fn(carry, payloads):
+                def body(c, payload):
+                    states, fb, outs = step(c["states"], c["feedback"],
+                                            payload)
+                    return {"states": states, "feedback": fb}, outs
+
+                carry, outs = jax.lax.scan(body, carry, payloads)
+                if boundary is not None:
+                    carry = boundary(carry)
+                if reducer is not None:
+                    outs = reducer(outs)
+                return carry, outs
+
+            donate = (0,) if self.donate and \
+                jax.default_backend() != "cpu" else ()
+            fn = jax.jit(chunk_fn, donate_argnums=donate)
+            self._compiled_chunk_full[key] = fn
+        return fn
+
     def _make_boundary(self, topology: Topology):
         """The chunk-boundary phase: apply every processor's ``boundary``
         hook to its state.  Returns None when no processor has one (the
@@ -445,21 +499,26 @@ class JitEngine(Engine):
         return self._compiled_boundary[key]
 
     def run_stream_chunked(self, topology: Topology, carry, chunks, *,
-                           on_chunk=None, collect_outputs: bool = True):
+                           on_chunk=None, collect_outputs: bool = True,
+                           reduce_outputs=None):
         """Chunked stream runtime: drive the scanned topology step chunk by
         chunk, bit-identical to the monolithic scan but at bounded memory
         -- stream length is no longer capped by what fits on device.
 
-        ``chunks`` is a ChunkedStream or any iterable of ``Chunk``s.  Each
-        chunk runs through the masked scan program (compiled once per chunk
-        shape); the padded tail of the final chunk is a no-op step and its
-        outputs are trimmed.  Between chunks the driver fires processor
-        ``boundary`` hooks (work hoisted out of the step HLO, e.g.
-        CluStream's macro k-means) and calls ``on_chunk(outputs, chunk,
-        carry)`` -- the streaming reduction point for per-chunk metrics and
-        mid-stream checkpoints.  ``collect_outputs=False`` drops the
-        per-chunk outputs after ``on_chunk`` instead of concatenating a
-        ``[T, ...]`` result, which is the whole point for long streams.
+        ``chunks`` is a ChunkedStream or any iterable of ``Chunk``s.  A
+        full chunk runs through the unmasked chunk program with the
+        ``boundary()`` hooks fused into its epilogue (one dispatch per
+        chunk; ``fuse_boundary=False`` keeps the separate-dispatch
+        oracle); the padded final chunk runs the masked scan program with
+        its no-op tail trimmed.  Between chunks the driver calls
+        ``on_chunk(outputs, chunk, carry)`` -- the streaming reduction
+        point for per-chunk metrics and mid-stream checkpoints.
+        ``collect_outputs=False`` drops the per-chunk outputs after
+        ``on_chunk`` instead of concatenating a ``[T, ...]`` result, which
+        is the whole point for long streams.  ``reduce_outputs`` is a
+        STABLE function (see ``_chunk_full_fn``) applied to each chunk's
+        stacked outputs INSIDE the compiled program where possible, so
+        unread output streams never materialize.
         """
         topology = self._as_topology(topology)
         boundary = self._boundary_fn(topology)
@@ -467,8 +526,9 @@ class JitEngine(Engine):
         it = iter(chunks)
         try:
             for chunk in it:
-                carry, outs = self._run_chunk(topology, carry, chunk)
-                if boundary is not None:
+                carry, outs, boundary_done = self._run_chunk(
+                    topology, carry, chunk, reducer=reduce_outputs)
+                if boundary is not None and not boundary_done:
                     with self._mesh_ctx():
                         carry = boundary(carry)
                 if on_chunk is not None:
@@ -479,26 +539,45 @@ class JitEngine(Engine):
             _close_iter(it)
         return carry, _concat_outputs(segments) if collect_outputs else None
 
-    def _run_chunk(self, topology: Topology, carry, chunk: Chunk):
-        """One chunk through the masked scan; the first chunk of a fresh
-        stream primes the feedback-carry structure through the plain jitted
-        step exactly like the monolithic path (bit-identity)."""
+    def _run_chunk(self, topology: Topology, carry, chunk: Chunk, *,
+                   reducer=None):
+        """One chunk through the compiled chunk program; the first chunk
+        of a fresh stream primes the feedback-carry structure through the
+        plain jitted step exactly like the monolithic path (bit-identity).
+        Full chunks take the unmasked program with the boundary hooks
+        fused (``fuse_boundary``); the padded tail chunk takes the masked
+        scan with a separate boundary dispatch.  Returns ``(carry, outs,
+        boundary_done)`` so the driver knows whether the epilogue already
+        fired."""
         payloads, valid = chunk.payload, chunk.valid
+        has_boundary = self._boundary_fn(topology) is not None
         segments = []
         if carry["feedback"] is None:
             carry, seg0, payloads = self._prime_first_step(
                 topology, carry, payloads)
+            if reducer is not None:
+                seg0 = reducer(seg0)
             segments.append(seg0)
             valid = valid[1:]
+        boundary_done = False
         if jax.tree.leaves(payloads)[0].shape[0]:
             with self._mesh_ctx():
-                carry, outs = self._chunk_scan_fn(topology)(
-                    carry, payloads, valid)
+                if not chunk.padded:
+                    fused = self.fuse_boundary and has_boundary
+                    carry, outs = self._chunk_full_fn(
+                        topology, fused_boundary=fused, reducer=reducer)(
+                        carry, payloads)
+                    boundary_done = fused
+                else:
+                    carry, outs = self._chunk_scan_fn(topology)(
+                        carry, payloads, valid)
+                    if reducer is not None:
+                        outs = reducer(outs)
             segments.append(outs)
         outs = _concat_outputs(segments)
         if chunk.padded:
             outs = jax.tree.map(lambda x: x[:chunk.length], outs)
-        return carry, outs
+        return carry, outs, boundary_done
 
 
 class ShardMapEngine(JitEngine):
@@ -524,8 +603,9 @@ class ShardMapEngine(JitEngine):
     failing, so one learner config runs on any mesh shape.
     """
 
-    def __init__(self, mesh, donate: bool = True):
-        super().__init__(donate=donate)
+    def __init__(self, mesh, donate: bool = True,
+                 fuse_boundary: bool = True):
+        super().__init__(donate=donate, fuse_boundary=fuse_boundary)
         self.mesh = mesh
 
     def _spec_fits(self, shape, spec) -> bool:
@@ -550,6 +630,13 @@ class ShardMapEngine(JitEngine):
             return x
         sharding = NamedSharding(self.mesh, spec)
         if place:
+            # committed-placement skip: a leaf the prefetch thread (or a
+            # previous placement pass) already device_put with exactly
+            # this sharding must not be transferred again -- the redundant
+            # device_put would serialize a copy the pipeline already paid
+            if isinstance(x, jax.Array) \
+                    and getattr(x, "sharding", None) == sharding:
+                return x
             return jax.device_put(x, sharding)
         return jax.lax.with_sharding_constraint(x, sharding)
 

@@ -10,6 +10,8 @@ test-then-train metrics; runs on any engine via the learner's jit'd step
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Any, Callable
 
@@ -93,7 +95,7 @@ class PrequentialEvaluation(Task):
 
 
 class MetricAccumulator:
-    """Streaming prequential metric reduction.
+    """Streaming prequential metric reduction with DEFERRED folding.
 
     The monolithic scan materializes ``[T, ...]`` metric outputs and
     reduces at the end; on an unbounded stream that is exactly the memory
@@ -102,74 +104,286 @@ class MetricAccumulator:
     cross to host -- and keeps running sums plus the per-batch curve.  Its
     state round-trips through ``state()``/``load()`` so a mid-stream
     checkpoint reproduces the uninterrupted run's final metrics exactly.
+
+    ``update`` does NOT synchronize: the chunk's metric leaves are kept as
+    (possibly still-executing) device arrays and folded lazily, in arrival
+    order, the first time a reader needs the numbers (``metric`` /
+    ``curve`` / ``seen`` / ``state()``).  The fold itself is the exact
+    float64 numpy reduction it always was -- deferral changes WHEN the
+    host pulls values, never WHAT it computes -- which is what lets the
+    pipelined chunk driver dispatch chunk k+1 while chunk k's metrics are
+    still on device.  Thread-safe: the driving loop appends while a drain
+    thread flushes forks for checkpoints.
     """
 
     def __init__(self):
         # scalars for single-learner runs; [F] per-tenant columns when the
         # metrics carry a trailing fleet axis (LearnerFleet runs) -- one
         # column per tenant, so no tenant's metrics ever mix
-        self.correct = 0.0
-        self.abs_err = 0.0
-        self.seen = 0.0
-        self.curve: list = []
+        self._correct = 0.0
+        self._abs_err = 0.0
+        self._seen = 0.0
+        self._curve: list = []
+        self._pending: list = []       # unfolded per-chunk metric dicts
+        self._lock = threading.Lock()
 
     def update(self, metrics):
-        """Fold in one chunk's stacked metrics dict.
+        """Record one chunk's stacked metrics dict -- NO host sync here.
 
         Leaves are ``[steps]`` (single learner) or ``[steps, F]`` (fleet:
-        one column per tenant).  A step that contributes zero weight (an
+        one column per tenant); they stay device arrays until a reader
+        forces the fold.  A step that contributes zero weight (an
         all-padding tail, an exhausted tenant) CARRIES THE PRIOR curve
         value forward instead of dividing by zero -- a spurious 0.0 dip
         would misreport a perfectly healthy stream."""
+        with self._lock:
+            self._pending.append(metrics)
+
+    def _fold(self, metrics):
         seen = np.asarray(metrics["seen"], np.float64)
         zeros = np.zeros_like(seen)
         corr = np.asarray(metrics.get("correct", zeros), np.float64)
         abse = np.asarray(metrics.get("abs_err", zeros), np.float64)
-        self.correct = self.correct + corr.sum(axis=0)
-        self.abs_err = self.abs_err + abse.sum(axis=0)
-        self.seen = self.seen + seen.sum(axis=0)
+        self._correct = self._correct + corr.sum(axis=0)
+        self._abs_err = self._abs_err + abse.sum(axis=0)
+        self._seen = self._seen + seen.sum(axis=0)
         signed = np.where(corr > 0, corr, -abse)
-        prev = self.curve[-1] if self.curve \
+        prev = self._curve[-1] if self._curve \
             else np.zeros(seen.shape[1:], np.float64)
         for t in range(seen.shape[0]):
             val = np.where(seen[t] > 0,
                            signed[t] / np.maximum(seen[t], 1e-9), prev)
             prev = float(val) if val.ndim == 0 else val
-            self.curve.append(prev)
+            self._curve.append(prev)
+
+    def flush(self):
+        """Fold every pending chunk (in update order).  This is the one
+        place device metric values cross to host."""
+        with self._lock:
+            for m in self._pending:
+                self._fold(m)
+            self._pending.clear()
+        return self
+
+    def fork(self):
+        """A snapshot accumulator covering exactly the chunks updated so
+        far, WITHOUT forcing a flush: folded state is shared by reference
+        (folds rebind, never mutate in place) and the pending list is
+        copied.  The pipelined driver hands forks to its drain thread so a
+        checkpoint written chunks behind the dispatch frontier still
+        records metrics up to ITS chunk only."""
+        out = MetricAccumulator()
+        with self._lock:
+            out._correct = self._correct
+            out._abs_err = self._abs_err
+            out._seen = self._seen
+            out._curve = list(self._curve)
+            out._pending = list(self._pending)
+        return out
+
+    @property
+    def correct(self):
+        return self.flush()._correct
+
+    @property
+    def abs_err(self):
+        return self.flush()._abs_err
+
+    @property
+    def seen(self):
+        return self.flush()._seen
+
+    @property
+    def curve(self) -> list:
+        return self.flush()._curve
 
     @property
     def metric(self):
         """Running metric: accuracy when correct-counts flowed, MAE
         otherwise.  A float for single-learner runs, an ``[F]`` vector for
         fleet runs; zero-weight (tenant) columns report 0.0, never NaN."""
-        if np.ndim(self.seen) == 0:
-            if not self.seen:
+        self.flush()
+        if np.ndim(self._seen) == 0:
+            if not self._seen:
                 return 0.0
-            return float(self.correct / self.seen) if self.correct \
-                else float(self.abs_err / self.seen)
-        num = np.where(np.asarray(self.correct) > 0,
-                       self.correct, self.abs_err)
-        return np.where(np.asarray(self.seen) > 0,
-                        num / np.maximum(self.seen, 1e-9), 0.0)
+            return float(self._correct / self._seen) if self._correct \
+                else float(self._abs_err / self._seen)
+        num = np.where(np.asarray(self._correct) > 0,
+                       self._correct, self._abs_err)
+        return np.where(np.asarray(self._seen) > 0,
+                        num / np.maximum(self._seen, 1e-9), 0.0)
 
     def state(self):
         """Checkpointable pytree of the accumulator."""
-        return {"correct": np.asarray(self.correct, np.float64),
-                "abs_err": np.asarray(self.abs_err, np.float64),
-                "seen": np.asarray(self.seen, np.float64),
-                "curve": np.asarray(self.curve, np.float64)}
+        self.flush()
+        return {"correct": np.asarray(self._correct, np.float64),
+                "abs_err": np.asarray(self._abs_err, np.float64),
+                "seen": np.asarray(self._seen, np.float64),
+                "curve": np.asarray(self._curve, np.float64)}
 
     def load(self, state):
         def _num(v):
             v = np.asarray(v, np.float64)
             return float(v) if v.ndim == 0 else v
-        self.correct = _num(state["correct"])
-        self.abs_err = _num(state["abs_err"])
-        self.seen = _num(state["seen"])
-        curve = np.asarray(state["curve"], np.float64)
-        self.curve = [float(v) for v in curve] if curve.ndim <= 1 \
-            else [row for row in curve]
+        with self._lock:
+            self._correct = _num(state["correct"])
+            self._abs_err = _num(state["abs_err"])
+            self._seen = _num(state["seen"])
+            curve = np.asarray(state["curve"], np.float64)
+            self._curve = [float(v) for v in curve] if curve.ndim <= 1 \
+                else [row for row in curve]
+            self._pending = []
         return self
+
+
+def _metrics_only(outs):
+    """Chunk-output reduction compiled into the chunk program (a STABLE
+    module-level function: the engine caches the compiled chunk program on
+    the reducer's identity).  Keeping only the metrics stream lets XLA
+    dead-code-eliminate every unread output stream from the chunk scan --
+    a topology emitting ``[chunk_len, B]`` predictions nobody reads stops
+    materializing them entirely."""
+    return {"metrics": outs["metrics"]}
+
+
+@dataclasses.dataclass
+class _ChunkTicket:
+    """One dispatched-but-not-drained chunk: everything the drain thread
+    needs to complete the chunk's host-side bookkeeping in order."""
+
+    index: int
+    done: Any             # small device leaf to await (chunk completion)
+    flag: Any             # lazy finite scalar, or None when check is off
+    carry: Any            # post-chunk carry (copied when donation is live)
+    outs: Any             # full outputs, only when on_chunk needs them
+    chunk: Any            # the Chunk, only when on_chunk needs it
+    pub_state: Any        # model state to publish, or None
+    acc_fork: Any         # MetricAccumulator fork for a due checkpoint
+    t_start: float        # dispatch wall-clock (heartbeat duration)
+
+
+class _ChunkDrain:
+    """Ordered background completion for the pipelined chunk driver.
+
+    The main loop dispatches chunk k+1 while the device executes chunk k;
+    every per-chunk host obligation that used to stall the dispatch loop
+    -- the finite check's sync, checkpoint save, snapshot publish, the
+    ``on_chunk`` callback, supervisor heartbeats -- moves here, processed
+    strictly in chunk order on one worker thread.  A semaphore sized
+    ``max_inflight_chunks`` is the backpressure: ``submit`` blocks once
+    that many chunks are dispatched but undrained, which also bounds the
+    device-side queue and the prefetched payload buffers kept alive.
+
+    Failure semantics mirror the synchronous driver exactly: a non-finite
+    flag marks ``poisoned_at`` and every later ticket is discarded
+    unprocessed (its checkpoint is never written, its snapshot never
+    published), newly-dead hosts detected after a heartbeat latch into
+    ``newly_dead`` for the main loop to act on at the next boundary, and
+    a raising callback re-raises on the main loop at the next submit or
+    flush."""
+
+    def __init__(self, ev, report, check: bool, window: int,
+                 known_dead: set):
+        self.ev = ev
+        self.report = report
+        self.check = check
+        self.poisoned_at: int | None = None
+        self.known_dead = set(known_dead)
+        self.newly_dead: set = set()
+        self._lock = threading.Lock()
+        self._q: queue.Queue = queue.Queue()
+        self._sem = threading.Semaphore(max(1, window))
+        self._error: BaseException | None = None
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------ main-loop side
+
+    def submit(self, ticket: _ChunkTicket):
+        """Enqueue one dispatched chunk; blocks on the in-flight window."""
+        self._raise_pending()
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._work, name="chunk-drain", daemon=True)
+            self._thread.start()
+        self._sem.acquire()
+        self._q.put(ticket)
+
+    def flush(self):
+        """Block until every submitted ticket is drained (or discarded)."""
+        self._q.join()
+        self._raise_pending()
+
+    def stop(self):
+        if self._thread is not None:
+            self._q.put(None)
+            self._thread.join()
+            self._thread = None
+
+    def take_newly_dead(self) -> set:
+        with self._lock:
+            out, self.newly_dead = self.newly_dead, set()
+            return out
+
+    def has_event(self) -> bool:
+        with self._lock:
+            return (self.poisoned_at is not None or bool(self.newly_dead)
+                    or self._error is not None)
+
+    def clear_poison(self):
+        with self._lock:
+            self.poisoned_at = None
+
+    def _raise_pending(self):
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err
+
+    # --------------------------------------------------------- worker side
+
+    def _work(self):
+        while True:
+            t = self._q.get()
+            if t is None:
+                self._q.task_done()
+                return
+            try:
+                if self._error is None:
+                    self._process(t)
+            except BaseException as e:   # surfaced on the main loop
+                with self._lock:
+                    self._error = e
+            finally:
+                self._sem.release()
+                self._q.task_done()
+
+    def _process(self, t: _ChunkTicket):
+        ev = self.ev
+        if self.poisoned_at is not None:
+            return                      # discard: the run is rolling back
+        if t.flag is not None:
+            if not bool(t.flag):        # the per-chunk sync, off hot path
+                with self._lock:
+                    self.poisoned_at = t.index
+                return
+        else:
+            jax.block_until_ready(t.done)
+        if t.pub_state is not None:
+            ev.publisher.publish(t.index, t.pub_state)
+        if t.acc_fork is not None:
+            ev._save(t.index, t.carry, t.acc_fork)
+        if ev.on_chunk is not None:
+            ev.on_chunk(t.outs, t.chunk, t.carry)
+        if ev.supervisor is not None:
+            ev.supervisor.heartbeat(ev.host, t.index,
+                                    time.perf_counter() - t.t_start)
+            self.report["heartbeats"] += 1
+            dead = ev._dead_hosts()
+            with self._lock:
+                newly = dead - self.known_dead
+                if newly:
+                    self.known_dead |= newly
+                    self.newly_dead |= newly
 
 
 class ChunkedPrequentialEvaluation(Task):
@@ -209,10 +423,23 @@ class ChunkedPrequentialEvaluation(Task):
         (``result.extra["report"]``).
 
     The driving loop runs each chunk through its own
-    ``engine.run_stream_chunked`` call -- same priming, same masked scan
+    ``engine.run_stream_chunked`` call -- same priming, same chunk
     program, same boundary-hook ordering as one fused call (the compiled
     chunk executables are cached per topology), so chunk-at-a-time
     control flow costs nothing and makes rollback/re-place possible.
+
+    Pipelining (``pipeline``, default on): the dispatch loop is
+    FREE-RUNNING -- the host dispatches chunk k+1 while the device still
+    executes chunk k, and blocks only at stream end, at an explicit
+    fence (rollback, elastic re-place, kill site), or on backpressure
+    once ``max_inflight_chunks`` chunks are dispatched but undrained.
+    Per-chunk host work (finite-check sync, checkpoint save, snapshot
+    publish, ``on_chunk``, heartbeats) runs in chunk order on a drain
+    thread (``_ChunkDrain``).  Results are bit-identical to
+    ``pipeline=False`` -- same metrics, same curve, same carry, same
+    checkpoint manifests, same kill/poison/elastic semantics -- the
+    synchronous driver survives as the oracle and for debugging (see
+    benchmarks/README.md).
     """
 
     def __init__(self, learner, stream, *, engine=None,
@@ -222,7 +449,9 @@ class ChunkedPrequentialEvaluation(Task):
                  check_finite: bool | None = None,
                  poison_policy: str = "retry", max_poison_retries: int = 1,
                  remesh=None, chips_per_host: int = 1,
-                 model_parallel: int = 1):
+                 model_parallel: int = 1,
+                 pipeline: bool | None = None,
+                 max_inflight_chunks: int = 2):
         from repro.core.engines import JitEngine
         self.learner = learner
         self.stream = stream
@@ -252,6 +481,8 @@ class ChunkedPrequentialEvaluation(Task):
         self.remesh = remesh         # (shape, axes) -> engine factory
         self.chips_per_host = int(chips_per_host)
         self.model_parallel = int(model_parallel)
+        self.pipeline = pipeline     # None -> pipelined (the default)
+        self.max_inflight_chunks = max(1, int(max_inflight_chunks))
         self.report: dict = {}
 
     def _save(self, chunk_index: int, carry, acc: MetricAccumulator):
@@ -343,29 +574,77 @@ class ChunkedPrequentialEvaluation(Task):
             ("remesh", tuple(shape), tuple(axes), cursor))
         return carry
 
-    def run(self, *, resume: bool = True) -> PrequentialResult:
-        learner = self.learner
-        report = {"events": [], "skipped_chunks": [], "rollbacks": 0,
-                  "remeshes": 0, "heartbeats": 0, "source_retries": []}
-        self.report = report
+    def _prologue(self, resume: bool, report: dict):
+        """Shared run setup: resume-or-init, restored-instance baseline,
+        finite-check default.  Returns (carry, start, acc, seen0, check)."""
         acc = MetricAccumulator()
         carry = None
         start = self.stream.start_chunk
-        key0 = self.key
         if resume:
             restored = self._restore()
             if restored is not None:
                 carry, start, acc = restored
                 report["events"].append(("resume", start))
         if carry is None:
-            carry = self.engine.init(learner, self.key)
+            carry = self.engine.init(self.learner, self.key)
         # restored instances: not processed now (summed over the fleet
         # axis when the accumulator keeps per-tenant columns)
         seen0 = float(np.sum(acc.seen))
-
         check = self.check_finite
         if check is None:       # default: on iff recovery can act on it
             check = self.checkpoint is not None or self.injector is not None
+        return carry, start, acc, seen0, check
+
+    def _epilogue(self, carry, acc, report, *, t0, timed, seen0, start,
+                  end) -> PrequentialResult:
+        """Shared run teardown: final fence, throughput, pending-writer
+        fences (checkpoint, async publisher), source-retry accounting."""
+        jax.block_until_ready(jax.tree.leaves(carry)[0])
+        t_end = time.perf_counter()
+        wall = max(t_end - t0, 1e-9)
+        seen_total = float(np.sum(acc.seen))
+        if len(timed) == 0 or seen_total == timed[0][1]:
+            thr = (seen_total - seen0) / wall     # single-chunk stream
+        else:
+            thr = (seen_total - timed[0][1]) / max(t_end - timed[0][0], 1e-9)
+        if self.checkpoint is not None:
+            self.checkpoint.wait()
+        report["source_retries"] = list(
+            getattr(self.stream, "retry_events", []))
+        # the events list is a capped ring buffer; the COUNT stays exact
+        report["source_retry_count"] = int(
+            getattr(self.stream, "retry_count",
+                    len(report["source_retries"])))
+        report["source_retries_dropped"] = int(
+            getattr(self.stream, "retry_events_dropped", 0))
+        if self.publisher is not None:
+            flush = getattr(self.publisher, "flush", None)
+            if callable(flush):
+                flush()     # async publisher: settle counters for status
+            status = getattr(self.publisher, "status", None)
+            if callable(status):
+                report["snapshots"] = status()
+        return PrequentialResult(
+            metric=acc.metric, throughput=thr, curve=acc.curve,
+            extra={"carry": carry, "seen": acc.seen,
+                   "chunks": end - start, "wall_s": wall,
+                   "report": report})
+
+    def run(self, *, resume: bool = True) -> PrequentialResult:
+        """Drive the stream.  ``pipeline=None``/``True`` uses the
+        free-running async driver; ``pipeline=False`` the synchronous
+        oracle.  Both produce bit-identical results."""
+        if self.pipeline is None or self.pipeline:
+            return self._run_pipelined(resume=resume)
+        return self._run_sync(resume=resume)
+
+    def _run_sync(self, *, resume: bool = True) -> PrequentialResult:
+        learner = self.learner
+        report = {"events": [], "skipped_chunks": [], "rollbacks": 0,
+                  "remeshes": 0, "heartbeats": 0, "source_retries": []}
+        self.report = report
+        key0 = self.key
+        carry, start, acc, seen0, check = self._prologue(resume, report)
         from repro.runtime.chaos import carry_all_finite
 
         every = self.checkpoint_every
@@ -396,7 +675,9 @@ class ChunkedPrequentialEvaluation(Task):
                         # the slow chunk
                         self.injector.maybe_delay(chunk.index)
                     carry, outs = self.engine.run_stream_chunked(
-                        learner, carry, [chunk])
+                        learner, carry, [chunk],
+                        reduce_outputs=(_metrics_only
+                                        if self.on_chunk is None else None))
                     if self.injector is not None:
                         # models "this chunk's compute blew up": the NaN
                         # lands in the post-chunk carry, where the boundary
@@ -447,30 +728,134 @@ class ChunkedPrequentialEvaluation(Task):
                 carry, cursor, acc = self._rollback(
                     poisoned_at, skip, retries, report, key0)
 
-        jax.block_until_ready(jax.tree.leaves(carry)[0])
-        t_end = time.perf_counter()
-        wall = max(t_end - t0, 1e-9)
-        seen_total = float(np.sum(acc.seen))
-        if len(timed) == 0 or seen_total == timed[0][1]:
-            thr = (seen_total - seen0) / wall     # single-chunk stream
-        else:
-            thr = (seen_total - timed[0][1]) / max(t_end - timed[0][0], 1e-9)
-        if self.checkpoint is not None:
-            self.checkpoint.wait()
-        report["source_retries"] = list(
-            getattr(self.stream, "retry_events", []))
-        # the events list is a capped ring buffer; the COUNT stays exact
-        report["source_retry_count"] = int(
-            getattr(self.stream, "retry_count",
-                    len(report["source_retries"])))
-        report["source_retries_dropped"] = int(
-            getattr(self.stream, "retry_events_dropped", 0))
-        if self.publisher is not None:
-            status = getattr(self.publisher, "status", None)
-            if callable(status):
-                report["snapshots"] = status()
-        return PrequentialResult(
-            metric=acc.metric, throughput=thr, curve=acc.curve,
-            extra={"carry": carry, "seen": acc.seen,
-                   "chunks": end - start, "wall_s": wall,
-                   "report": report})
+        return self._epilogue(carry, acc, report, t0=t0, timed=timed,
+                              seen0=seen0, start=start, end=end)
+
+    def _run_pipelined(self, *, resume: bool = True) -> PrequentialResult:
+        """Free-running chunk driver: dispatch chunk k+1 while the device
+        executes chunk k.  The host loop never blocks on a chunk's result
+        -- the finite check becomes a lazy device flag, metrics enqueue as
+        deferred device arrays, and checkpoint/publish/on_chunk/heartbeat
+        obligations ride a ``_ChunkTicket`` to the drain thread, which
+        completes them strictly in chunk order.  Blocking points: stream
+        end, the first chunk (compile-exclusion timestamp), kill fences,
+        rollback / elastic re-place boundaries, and backpressure once
+        ``max_inflight_chunks`` tickets are undrained.  Bit-identical to
+        ``_run_sync`` by construction: same chunk programs, same fold
+        order, same failure ordering."""
+        learner = self.learner
+        report = {"events": [], "skipped_chunks": [], "rollbacks": 0,
+                  "remeshes": 0, "heartbeats": 0, "source_retries": []}
+        self.report = report
+        key0 = self.key
+        carry, start, acc, seen0, check = self._prologue(resume, report)
+        from repro.runtime.chaos import carry_finite_flag
+        from repro.serving.snapshot import model_state_of
+
+        every = self.checkpoint_every
+        inj = self.injector
+        reducer = _metrics_only if self.on_chunk is None else None
+        # donated buffers die at the NEXT dispatch; anything a ticket must
+        # still read afterwards (checkpoint/publish/on_chunk carry) gets
+        # copied first.  CPU never donates, so this is free there.
+        donating = bool(getattr(self.engine, "donate", False)) \
+            and jax.default_backend() != "cpu"
+        timed: list = []
+        skip: set[int] = set()
+        retries: dict[int, int] = {}
+        end = self.stream.n_chunks
+        cursor = start
+
+        t0 = time.perf_counter()
+        drain = _ChunkDrain(self, report, check, self.max_inflight_chunks,
+                            self._dead_hosts())
+        try:
+            while cursor < end:
+                poisoned_local = None
+                it = iter(self.stream.starting_at(cursor))
+                try:
+                    for chunk in it:
+                        if drain.has_event():
+                            break    # fence: rollback/re-place/error pending
+                        if chunk.index in skip:
+                            report["events"].append(("skip", chunk.index))
+                            cursor = chunk.index + 1
+                            continue
+                        tc = time.perf_counter()
+                        if inj is not None:
+                            inj.maybe_delay(chunk.index)
+                        carry, outs = self.engine.run_stream_chunked(
+                            learner, carry, [chunk], reduce_outputs=reducer)
+                        if inj is not None:
+                            carry = inj.maybe_poison(chunk.index, carry)
+                        flag = carry_finite_flag(carry) if check else None
+                        if (inj is not None and inj.kill_at_chunk is not None
+                                and not inj.killed
+                                and int(chunk.index) == int(inj.kill_at_chunk)):
+                            # kill fence: drain everything first so exactly
+                            # the checkpoints a synchronous run would have
+                            # issued are on disk, then replicate the sync
+                            # ordering (earlier poison > own finite check >
+                            # kill) before dying
+                            drain.flush()
+                            if drain.poisoned_at is not None:
+                                break
+                            if flag is not None and not bool(flag):
+                                poisoned_local = chunk.index
+                                break
+                            inj.maybe_kill(chunk.index)
+                        acc.update(outs["metrics"])
+                        save_due = (self.checkpoint is not None
+                                    and (chunk.index + 1) % every == 0)
+                        # fork BEFORE dispatching the next chunk: the
+                        # snapshot covers exactly chunks <= this one, no
+                        # matter when the drain's flush happens
+                        acc_fork = acc.fork() if save_due else None
+                        t_carry = carry
+                        if donating and (save_due or self.on_chunk is not None
+                                         or self.publisher is not None):
+                            t_carry = jax.tree.map(jnp.array, carry)
+                        drain.submit(_ChunkTicket(
+                            index=chunk.index,
+                            done=jax.tree.leaves(outs["metrics"])[0],
+                            flag=flag,
+                            carry=t_carry,
+                            outs=outs if self.on_chunk is not None else None,
+                            chunk=chunk if self.on_chunk is not None else None,
+                            pub_state=(model_state_of(t_carry)
+                                       if self.publisher is not None
+                                       else None),
+                            acc_fork=acc_fork,
+                            t_start=tc))
+                        cursor = chunk.index + 1
+                        if not timed:
+                            # compile-exclusion timestamp (same as sync):
+                            # the only steady-state sync, and only once
+                            jax.block_until_ready(jax.tree.leaves(carry)[0])
+                            timed.append((time.perf_counter(),
+                                          float(np.sum(acc.seen))))
+                finally:
+                    close = getattr(it, "close", None)
+                    if close is not None:
+                        close()   # unblock the producer deterministically
+                drain.flush()
+                poisoned = drain.poisoned_at
+                if poisoned is None:
+                    poisoned = poisoned_local
+                if poisoned is not None:
+                    # main-loop state past the poison chunk is garbage
+                    # (dispatched blind); _rollback replaces carry, cursor
+                    # and accumulator wholesale, so none of it survives
+                    carry, cursor, acc = self._rollback(
+                        poisoned, skip, retries, report, key0)
+                    drain.clear_poison()
+                    continue
+                newly_dead = drain.take_newly_dead()
+                if newly_dead:
+                    carry = self._elastic_replace(
+                        cursor, carry, acc, report, newly_dead)
+        finally:
+            drain.stop()
+
+        return self._epilogue(carry, acc, report, t0=t0, timed=timed,
+                              seen0=seen0, start=start, end=end)

@@ -29,6 +29,27 @@ import numpy as np
 from repro.data.generators import bin_numeric
 
 
+def _already_placed(x, sharding) -> bool:
+    """True when `x` is a device array whose placement already satisfies
+    the requested `sharding` -- re-issuing ``jax.device_put`` would be a
+    redundant transfer (the prefetch thread commits chunks to device; the
+    consumer must not pay that copy twice).  With no sharding requested,
+    any device array qualifies (it is already on a device); with one, the
+    shardings must match exactly."""
+    if not isinstance(x, jax.Array):
+        return False
+    if sharding is None:
+        return True
+    return getattr(x, "sharding", None) == sharding
+
+
+def _place(x, sharding):
+    if _already_placed(x, sharding):
+        return x
+    return jax.device_put(x) if sharding is None \
+        else jax.device_put(x, sharding)
+
+
 class StreamPipeline:
     """Prequential micro-batch stream with background prefetch."""
 
@@ -56,7 +77,7 @@ class StreamPipeline:
             if self.n_bins:
                 x = bin_numeric(x, self.n_bins)
             if self.sharding is not None:
-                x = jax.device_put(x, self.sharding)
+                x = _place(x, self.sharding)
             q.put((x, y))
         q.put(None)
 
@@ -296,11 +317,13 @@ class ChunkedStream:
                 chunk = _pad_chunk(i, self._fetch_retry(i), self.chunk_len)
                 if self.to_device:
                     # async host->device copy of chunk k+1 overlaps chunk
-                    # k's compute (device_put returns immediately)
-                    dput = (lambda x: jax.device_put(x, self.sharding)) \
-                        if self.sharding is not None else jax.device_put
+                    # k's compute (device_put returns immediately); leaves
+                    # a generator already committed with the right
+                    # placement are passed through untouched
                     chunk = dataclasses.replace(
-                        chunk, payload=jax.tree.map(dput, chunk.payload))
+                        chunk, payload=jax.tree.map(
+                            lambda x: _place(x, self.sharding),
+                            chunk.payload))
                 if not put(chunk):
                     return
             put(None)

@@ -51,18 +51,28 @@ class SimulatedKill(RuntimeError):
         self.chunk_index = int(chunk_index)
 
 
-def carry_all_finite(carry) -> bool:
-    """True iff every inexact (float/complex) leaf of `carry` is finite.
+def carry_finite_flag(carry):
+    """LAZY finiteness of `carry`: a device bool scalar, not a host bool.
 
-    One fused all-reduce per leaf, combined on host -- cheap relative to a
-    chunk's compute, and safe under a mesh (jnp.all over a sharded array
-    lowers to the collective).  Integer/bool leaves are vacuously fine."""
-    oks = []
+    One fused all-reduce per inexact leaf, AND-combined ON DEVICE, so the
+    caller gets a deferred scalar it can hold without synchronizing -- the
+    pipelined chunk driver dispatches the check alongside chunk k+1 and
+    only blocks on it from the drain thread.  Safe under a mesh (jnp.all
+    over a sharded array lowers to the collective).  Integer/bool leaves
+    are vacuously fine; a carry with no inexact leaves is finite."""
+    flag = None
     for leaf in jax.tree.leaves(carry):
         x = jnp.asarray(leaf)
         if jnp.issubdtype(x.dtype, jnp.inexact) and x.size:
-            oks.append(bool(jnp.all(jnp.isfinite(x))))
-    return all(oks)
+            ok = jnp.all(jnp.isfinite(x))
+            flag = ok if flag is None else jnp.logical_and(flag, ok)
+    return jnp.asarray(True) if flag is None else flag
+
+
+def carry_all_finite(carry) -> bool:
+    """True iff every inexact (float/complex) leaf of `carry` is finite.
+    The BLOCKING form of ``carry_finite_flag`` (host sync)."""
+    return bool(carry_finite_flag(carry))
 
 
 def poison_carry(carry, value: float = float("nan")):

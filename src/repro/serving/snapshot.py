@@ -34,6 +34,7 @@ any moment.  ``SnapshotPublisher`` is the boundary between the two worlds:
 from __future__ import annotations
 
 import dataclasses
+import queue
 import threading
 import time
 from typing import Any
@@ -96,7 +97,8 @@ class SnapshotPublisher:
 
     def __init__(self, *, max_staleness_chunks: int = 4,
                  breaker_threshold: int = 3, copy: bool = True,
-                 checkpoint=None, clock=time.monotonic):
+                 checkpoint=None, clock=time.monotonic,
+                 async_publish: bool = False, max_pending: int = 2):
         self.max_staleness_chunks = int(max_staleness_chunks)
         self.breaker_threshold = max(1, int(breaker_threshold))
         self.copy = copy
@@ -111,6 +113,17 @@ class SnapshotPublisher:
         self.breaker_open = False
         self.breaker_trips = 0
         self.events: list[tuple] = []
+        # async mode: publish() only OBSERVES + enqueues; validation, the
+        # back-buffer copy and the flip run on a worker thread, strictly
+        # in submission order.  max_pending bounds the queue (each pending
+        # entry pins a candidate state alive), matching the chunk
+        # pipeline's bounded in-flight window.  flush() fences.
+        self.async_publish = bool(async_publish)
+        self.max_pending = max(1, int(max_pending))
+        self._q: queue.Queue = queue.Queue()
+        self._sem = threading.Semaphore(self.max_pending)
+        self._worker: threading.Thread | None = None
+        self._worker_error: BaseException | None = None
 
     # --------------------------------------------------------- validation
 
@@ -137,8 +150,66 @@ class SnapshotPublisher:
 
     def publish(self, chunk_index: int, state) -> bool:
         """Validate + install `state` as the serving snapshot for chunk
-        boundary `chunk_index`.  Returns True when readers can see it."""
+        boundary `chunk_index`.  Returns True when readers can see it.
+
+        With ``async_publish`` the call is NON-BLOCKING (bar the bounded
+        ``max_pending`` backpressure): the train cursor advances now --
+        staleness semantics are unchanged -- while validation + flip land
+        on the worker in submission order.  The optimistic True means
+        "queued"; rejections still count and trip the breaker when the
+        worker gets there, and ``flush()`` fences before reading
+        counters."""
         self.observe(chunk_index)
+        if self.async_publish:
+            self._raise_worker_error()
+            if self._worker is None:
+                self._worker = threading.Thread(
+                    target=self._drain, name="snapshot-publish", daemon=True)
+                self._worker.start()
+            self._sem.acquire()
+            self._q.put((int(chunk_index), state))
+            return True
+        return self._publish_sync(chunk_index, state)
+
+    def flush(self):
+        """Block until every queued publication is validated + installed
+        (or rejected).  No-op in synchronous mode."""
+        if self.async_publish:
+            self._q.join()
+            self._raise_worker_error()
+
+    def close(self):
+        """flush + stop the worker thread (restartable: a later publish
+        spawns a fresh worker)."""
+        if self._worker is not None:
+            self._q.put(None)
+            self._worker.join()
+            self._worker = None
+        self._raise_worker_error()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            try:
+                if self._worker_error is None:
+                    self._publish_sync(*item)
+            except BaseException as e:      # surfaced at next publish/flush
+                with self._lock:
+                    self._worker_error = e
+            finally:
+                self._sem.release()
+                self._q.task_done()
+
+    def _raise_worker_error(self):
+        with self._lock:
+            err, self._worker_error = self._worker_error, None
+        if err is not None:
+            raise err
+
+    def _publish_sync(self, chunk_index: int, state) -> bool:
         reason = self.validate(state)
         if reason is not None:
             with self._lock:
@@ -209,6 +280,7 @@ class SnapshotPublisher:
                 "train_cursor": self.train_cursor,
                 "snapshot_chunk": None if cur is None else cur.chunk_index,
                 "snapshot_version": 0 if cur is None else cur.version,
+                "pending_publishes": self._q.unfinished_tasks,
                 "staleness_chunks": stale,
                 "degraded": (self.breaker_open or cur is None
                              or stale > self.max_staleness_chunks),

@@ -1,0 +1,372 @@
+"""Async chunk pipeline: the free-running dispatch loop (host dispatches
+chunk k+1 while the device executes chunk k) must be BIT-IDENTICAL to the
+synchronous oracle driver -- final carry, metric curves, checkpoint
+manifests, kill/resume and chaos semantics -- across every learner family
+and every in-flight window.  Plus the satellite regressions: no per-chunk
+host sync on the hot path (S1), no redundant device_put on chunks the
+prefetch thread already placed (S2), fused-vs-separate boundary dispatch
+parity, and async checkpoint/publisher equivalence."""
+
+import dataclasses
+import json
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.engines import JitEngine
+from repro.core.evaluation import (ChunkedPrequentialEvaluation,
+                                   MetricAccumulator)
+from repro.data.generators import RandomTreeGenerator, bin_numeric
+from repro.data.pipeline import ChunkedStream, _already_placed, _place
+from repro.ml.amrules import AMRules, RulesConfig
+from repro.ml.clustream import CluStream, CluStreamConfig
+from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
+from repro.ml.htree import TreeConfig
+from repro.ml.vht import VHT, VHTConfig
+from repro.runtime import FaultInjector, SimulatedKill
+from repro.serving.snapshot import SnapshotPublisher
+
+B = 64
+T = 8           # stream length (micro-batches)
+C = 3           # chunk_len -> 3 chunks
+TC = TreeConfig(n_attrs=12, n_bins=8, n_classes=2, max_nodes=63, n_min=20,
+                delta=0.05, tau=0.1)
+RC = RulesConfig(n_attrs=12, n_bins=8, max_rules=16, n_min=100)
+CC = CluStreamConfig(n_dims=12, n_micro=16, n_macro=3, period=2 * B)
+
+
+def _make_stream():
+    gen = RandomTreeGenerator(n_cat=6, n_num=6, depth=5, seed=3)
+    key = jax.random.PRNGKey(0)
+    xs, ys = [], []
+    for _ in range(T):
+        key, k = jax.random.split(key)
+        x, y = gen.sample(k, B)
+        xs.append(bin_numeric(x, 8))
+        ys.append(y)
+    return jnp.stack(xs), jnp.stack(ys)
+
+
+XS, YS = _make_stream()
+
+
+def _payload(family):
+    if family == "clustream":
+        return {"x": XS.astype(jnp.float32)}
+    if family == "amrules":
+        return {"x": XS, "y": YS.astype(jnp.float32)}
+    return {"x": XS, "y": YS}
+
+
+LEARNERS = {
+    "vht": VHT(VHTConfig(TC)),
+    "ozabag": OzaEnsemble(EnsembleConfig(tree=TC, n_members=3)),
+    "amrules": AMRules(RC),
+    "clustream": CluStream(CC),
+}
+# one engine per family so every run after the first reuses the compiled
+# chunk programs (cache keyed on the wrapped topology)
+ENGINES = {name: JitEngine() for name in LEARNERS}
+_SYNC_CACHE: dict = {}
+
+
+def _evaluation(family, **kw):
+    kw.setdefault("engine", ENGINES[family])
+    return ChunkedPrequentialEvaluation(
+        LEARNERS[family], ChunkedStream(_payload(family), C), **kw)
+
+
+def _sync_reference(family):
+    """The synchronous-oracle run each pipelined run must reproduce."""
+    if family not in _SYNC_CACHE:
+        _SYNC_CACHE[family] = _evaluation(
+            family, pipeline=False).run(resume=False)
+    return _SYNC_CACHE[family]
+
+
+def _assert_trees_identical(a, b):
+    la = jax.tree_util.tree_flatten_with_path(a)[0]
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for (path, x), y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(path))
+
+
+# ------------------- pipelined == synchronous, all four families -----------
+
+@pytest.mark.parametrize("family", sorted(LEARNERS))
+def test_pipelined_bit_identical_to_sync(family):
+    ref = _sync_reference(family)
+    r = _evaluation(family, pipeline=True).run(resume=False)
+    assert r.metric == ref.metric
+    assert r.curve == ref.curve
+    _assert_trees_identical(ref.extra["carry"], r.extra["carry"])
+
+
+def _manifest_of(directory, step):
+    d = Path(directory) / f"step_{step:010d}"
+    m = json.loads((d / "manifest.json").read_text())
+    m.pop("time")                     # wall clock: the one legitimate diff
+    return m
+
+
+def test_pipelined_checkpoints_bit_identical_manifests(tmp_path):
+    """Every checkpoint a pipelined run writes -- carry, cursor, key AND
+    the folded metric-accumulator state (captured via fork at dispatch
+    time) -- matches the synchronous run's manifest byte-for-byte (same
+    tensors, same md5s)."""
+    runs = {}
+    for mode, flag in (("sync", False), ("pipe", True)):
+        mgr = CheckpointManager(tmp_path / mode, keep=0, async_write=False)
+        r = _evaluation("vht", checkpoint=mgr, checkpoint_every=1,
+                        pipeline=flag).run(resume=False)
+        mgr.wait()
+        runs[mode] = (r, mgr)
+    r_sync, m_sync = runs["sync"]
+    r_pipe, m_pipe = runs["pipe"]
+    assert r_pipe.metric == r_sync.metric and r_pipe.curve == r_sync.curve
+    steps = m_sync.all_steps()
+    assert steps == m_pipe.all_steps() and len(steps) == -(-T // C)
+    for s in steps:
+        assert _manifest_of(tmp_path / "sync", s) == \
+            _manifest_of(tmp_path / "pipe", s)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(family=st.sampled_from(sorted(LEARNERS)),
+           window=st.sampled_from([1, 2, 4]))
+    @settings(max_examples=8, deadline=None)
+    def test_pipelined_property_any_window_bit_identical(family, window):
+        """Property: whatever the in-flight window (1 = lockstep with a
+        deferred drain, 4 > n_chunks = fully unconstrained), the pipelined
+        run equals the synchronous oracle exactly."""
+        ref = _sync_reference(family)
+        r = _evaluation(family, pipeline=True,
+                        max_inflight_chunks=window).run(resume=False)
+        assert r.metric == ref.metric and r.curve == ref.curve
+        _assert_trees_identical(ref.extra["carry"], r.extra["carry"])
+
+
+# ------------------------- kill / resume under the async driver ------------
+
+def test_pipelined_kill_resume_bit_identical(tmp_path):
+    """The kill fence drains in-flight tickets first, so the on-disk state
+    at death is exactly the synchronous run's; a resumed (also pipelined)
+    run finishes bit-identically."""
+    ref = _sync_reference("vht")
+    mgr = CheckpointManager(tmp_path, keep=0, async_write=False)
+    killed = _evaluation("vht", checkpoint=mgr, checkpoint_every=1,
+                         injector=FaultInjector(kill_at_chunk=1),
+                         pipeline=True, max_inflight_chunks=4)
+    with pytest.raises(SimulatedKill):
+        killed.run(resume=False)
+    # chunk 1's work died before its checkpoint: cursor on disk is 1
+    assert mgr.latest_step() == 1
+    r = _evaluation("vht", checkpoint=CheckpointManager(
+        tmp_path, keep=0, async_write=False),
+        pipeline=True).run(resume=True)
+    assert r.metric == ref.metric and r.curve == ref.curve
+    _assert_trees_identical(ref.extra["carry"], r.extra["carry"])
+
+
+def test_pipelined_delay_chunk_chaos_bit_identical():
+    """Straggler injection under the async driver: the delayed chunk slows
+    the pipeline (backpressure holds), changes nothing."""
+    ref = _sync_reference("vht")
+    ev = _evaluation("vht", injector=FaultInjector().delay_chunk(1, 0.05),
+                     pipeline=True)
+    r = ev.run(resume=False)
+    assert r.metric == ref.metric and r.curve == ref.curve
+    _assert_trees_identical(ref.extra["carry"], r.extra["carry"])
+
+
+def test_pipelined_poison_rollback_bit_identical(tmp_path):
+    """Poison detected by the DRAIN (the main loop has already dispatched
+    past it blind): later tickets are discarded, the rollback replays from
+    the last checkpoint, and the retried run matches the oracle."""
+    ref = _sync_reference("vht")
+    mgr = CheckpointManager(tmp_path, keep=0, async_write=False)
+    ev = _evaluation("vht", checkpoint=mgr, checkpoint_every=1,
+                     injector=FaultInjector(poison_at_chunk=1),
+                     poison_policy="retry", pipeline=True,
+                     max_inflight_chunks=4)
+    r = ev.run(resume=False)
+    assert ev.report["rollbacks"] == 1
+    assert ("poison", 1, "retry", 1) in ev.report["events"]
+    assert ev.report["skipped_chunks"] == []
+    assert r.metric == ref.metric and r.curve == ref.curve
+    _assert_trees_identical(ref.extra["carry"], r.extra["carry"])
+
+
+# -------------------- S1: no per-chunk host sync on the hot path -----------
+
+def test_metric_accumulator_defers_host_transfer():
+    """update() must keep the chunk's metric columns as device arrays --
+    the fold to f64 numpy happens at the first report/checkpoint read, in
+    update order, producing the exact same curve."""
+    acc = MetricAccumulator()
+    dev = {"seen": jnp.full((2,), 8.0), "correct": jnp.asarray([6.0, 7.0])}
+    acc.update(dev)
+    assert len(acc._pending) == 1
+    assert acc._pending[0]["seen"] is dev["seen"]     # untouched, unsynced
+    assert acc.metric == 13.0 / 16.0                  # the read folds
+    assert acc._pending == []
+    assert acc.curve == [6.0 / 8.0, 7.0 / 8.0]
+
+
+def test_pipelined_hot_path_has_no_per_chunk_block(monkeypatch):
+    """Regression (S1): the MAIN thread blocks exactly twice per run --
+    the first-chunk compile-exclusion timestamp and the final fence --
+    never once per chunk.  Drain-thread blocks are the design, not a
+    regression, so only main-thread calls count."""
+    calls = {"main": 0, "other": 0}
+    real = jax.block_until_ready
+
+    def counting(x):
+        where = ("main" if threading.current_thread()
+                 is threading.main_thread() else "other")
+        calls[where] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", counting)
+    r = _evaluation("amrules", pipeline=True).run(resume=False)
+    assert r.extra["chunks"] == -(-T // C) > 2
+    assert calls["main"] == 2
+
+
+# ------------- S2: committed placement is never transferred twice ----------
+
+def test_place_skips_already_committed_arrays(monkeypatch):
+    """The prefetch thread device_puts every chunk payload; a second
+    placement pass over the same array must be the identity, not another
+    transfer."""
+    host = np.arange(6.0)
+    placed = _place(host, None)
+    assert isinstance(placed, jax.Array) and _already_placed(placed, None)
+    puts = []
+    real = jax.device_put
+    monkeypatch.setattr(jax, "device_put",
+                        lambda x, *a, **k: puts.append(1) or real(x, *a, **k))
+    assert _place(placed, None) is placed             # committed: skipped
+    assert puts == []
+    _place(np.zeros(3), None)                         # host array: placed
+    assert puts == [1]
+
+
+def test_sharded_hint_leaf_skips_committed_placement(monkeypatch):
+    """ShardMapEngine's placement pass (engine-side of S2): a leaf already
+    device_put with exactly the target sharding passes through untouched;
+    anything else still gets transferred."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.core.engines import ShardMapEngine
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    eng = ShardMapEngine(mesh)
+    spec = P(None, None)
+    x = jax.device_put(jnp.ones((4, 4)), NamedSharding(mesh, spec))
+    puts = []
+    real = jax.device_put
+    monkeypatch.setattr(jax, "device_put",
+                        lambda v, *a, **k: puts.append(1) or real(v, *a, **k))
+    assert eng._hint_leaf(x, spec, place=True) is x   # committed: skipped
+    assert puts == []
+    y = eng._hint_leaf(np.ones((4, 4)), spec, place=True)
+    assert puts == [1] and isinstance(y, jax.Array)
+
+
+# ------------------ fused boundary epilogue == separate dispatch -----------
+
+def test_fused_boundary_bit_identical_to_separate_dispatch():
+    """The boundary() hook fused into the chunk program's tail (one
+    dispatch per chunk) equals the separate-dispatch oracle exactly --
+    CluStream's boundary-mode macro phase is the only family with real
+    boundary work."""
+    cc = dataclasses.replace(CC, macro_impl="boundary", period=2 * B)
+    payload = {"x": XS[:6].astype(jnp.float32)}
+    results = []
+    for fuse in (True, False):
+        eng = JitEngine(fuse_boundary=fuse)
+        cs = CluStream(cc)
+        carry = eng.init(cs, jax.random.PRNGKey(0))
+        results.append(eng.run_stream(cs, carry, payload, chunk_len=2))
+    (c_fused, o_fused), (c_sep, o_sep) = results
+    assert float(c_fused["states"]["clustream"]["macro_t"]) > 0
+    _assert_trees_identical(c_fused, c_sep)
+    _assert_trees_identical(o_fused, o_sep)
+
+
+# ---------------- async checkpoint transfer + async publisher --------------
+
+def test_async_transfer_checkpoint_identical_bytes(tmp_path):
+    """transfer_async moves the device->host harvest onto the writer
+    thread; the bytes on disk (tensor md5s) cannot change."""
+    tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3))},
+            "n": np.int64(7)}
+    a = CheckpointManager(tmp_path / "a", transfer_async=True)
+    b = CheckpointManager(tmp_path / "b", transfer_async=False)
+    a.save(1, tree)
+    b.save(1, tree)
+    a.wait(), b.wait()
+    assert _manifest_of(tmp_path / "a", 1) == _manifest_of(tmp_path / "b", 1)
+    ta, _ = a.restore_structured()
+    tb, _ = b.restore_structured()
+    _assert_trees_identical(ta, tb)
+
+
+def test_async_publisher_equivalent_to_sync_after_flush():
+    """async_publish validates/installs on a worker in submission order;
+    after flush() every counter, breaker transition and event matches the
+    synchronous publisher's."""
+    good = {"w": jnp.ones(3)}
+    bad = {"w": jnp.asarray([1.0, float("nan"), 1.0])}
+    seq = [(0, good), (1, bad), (2, bad), (3, bad), (4, good)]
+    pubs = {"sync": SnapshotPublisher(breaker_threshold=3),
+            "async": SnapshotPublisher(breaker_threshold=3,
+                                       async_publish=True, max_pending=2)}
+    for i, state in seq:
+        pubs["sync"].publish(i, state)
+        pubs["async"].publish(i, state)
+    pubs["async"].flush()
+    s, a = pubs["sync"].status(), pubs["async"].status()
+    assert a.pop("pending_publishes") == 0
+    s.pop("pending_publishes")
+    assert a == s
+    assert pubs["async"].events == pubs["sync"].events
+    assert pubs["async"].breaker_trips == 1
+    cur = pubs["async"].current()
+    assert cur.chunk_index == 4 and cur.version == 2
+    pubs["async"].close()
+
+
+def test_pipelined_run_with_async_publisher_matches_sync_snapshots():
+    """End to end: pipelined evaluation + async publisher -- the final
+    snapshot and counters equal the synchronous run's (the evaluation
+    epilogue flushes before reading status)."""
+    stats = {}
+    for mode, flag in (("sync", False), ("pipe", True)):
+        pub = SnapshotPublisher(async_publish=flag)
+        r = _evaluation("vht", publisher=pub,
+                        pipeline=flag).run(resume=False)
+        st = dict(r.extra["report"]["snapshots"])
+        assert st.pop("pending_publishes") == 0
+        stats[mode] = (st, pub.current())
+        if flag:
+            pub.close()
+    assert stats["pipe"][0] == stats["sync"][0]
+    _assert_trees_identical(stats["sync"][1].state, stats["pipe"][1].state)
+    assert stats["pipe"][1].chunk_index == stats["sync"][1].chunk_index
