@@ -49,6 +49,11 @@ def main() -> None:
                          f"{SHARDED_DEVICES} forced host devices")
     ap.add_argument("--bench-json", default="BENCH_vht.json",
                     help="where to write the structured VHT numbers")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="enable jax's persistent compilation cache at DIR "
+                         "for the whole run and print the hit/miss split "
+                         "at the end (second runs of the same suite skip "
+                         "the XLA compiles)")
     ap.add_argument("--profile", nargs="?", const="profile_trace",
                     default=None, metavar="DIR",
                     help="wrap the run in a jax.profiler trace written to "
@@ -64,10 +69,15 @@ def main() -> None:
             sys.exit("--sharded must set XLA_FLAGS before jax initializes "
                      "its backends; run in a fresh process")
 
+    if args.compile_cache:
+        from repro.runtime import compile_cache
+        compile_cache.enable(args.compile_cache)
+
     from benchmarks import (amrules_benchmarks, clustream_benchmarks,
                             ensemble_benchmarks, fleet_benchmarks,
                             kernel_benchmarks, lm_roofline,
-                            serving_benchmarks, vht_benchmarks)
+                            multihost_benchmarks, serving_benchmarks,
+                            vht_benchmarks)
 
     suites = {
         "vht": vht_benchmarks,
@@ -78,10 +88,15 @@ def main() -> None:
         "kernels": kernel_benchmarks,
         "serving": serving_benchmarks,
         "fleet": fleet_benchmarks,
+        "multihost": multihost_benchmarks,
     }
     if args.sharded:
         suites = {k: v for k, v in suites.items()
                   if k in ("amrules", "ensemble")}
+    elif args.only is None:
+        # the multihost suite spawns its own 2-process worker groups (and
+        # a 1x8 reference process); run it only when asked for explicitly
+        suites.pop("multihost")
     if args.only:
         if args.only not in suites:
             sys.exit(f"unknown suite {args.only!r} "
@@ -108,6 +123,11 @@ def main() -> None:
                       flush=True)
     if args.profile:
         print(f"wrote jax.profiler trace under {args.profile}", flush=True)
+    if args.compile_cache:
+        from repro.runtime import compile_cache
+        st = compile_cache.stats()
+        print(f"compile_cache,{st['requests']},hits={st['hits']};"
+              f"misses={st['misses']};dir={args.compile_cache}", flush=True)
     mode = "fast" if fast else "full"
     for name, mod in suites.items():
         bench = getattr(mod, "BENCH", None)

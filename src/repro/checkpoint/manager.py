@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import host_value, put_global, spans_processes
+
 logger = logging.getLogger("repro.checkpoint")
 
 
@@ -140,11 +142,27 @@ class CheckpointManager:
     # ------------------------------------------------------------- save
 
     def save(self, step: int, tree, *, blocking: bool = False):
-        """Snapshot `tree` at `step`.  Returns immediately (async)."""
+        """Snapshot `tree` at `step`.  Returns immediately (async).
+
+        On a process-spanning mesh the harvest is different: leaves whose
+        shards live on other processes gather through a cross-process
+        collective (``host_value``) on the CALLING thread -- every process
+        must issue the same collectives in the same order, so the gather
+        cannot move to the writer thread -- and only process 0 serializes
+        to disk (the checkpoint stays unsharded/mesh-independent, so a
+        different process count can restore it)."""
         self.wait()
         leaves, treedef = _flatten(tree)
-        async_now = self.async_write and not blocking
-        if self.transfer_async and async_now:
+        spanning = any(isinstance(x, jax.Array) and spans_processes(x.sharding)
+                       for x in leaves)
+        async_now = self.async_write and not blocking and not spanning
+        if spanning:
+            # collective gather, deterministic order, caller thread
+            host_leaves = [host_value(x) for x in leaves]
+            if jax.process_index() != 0:
+                return          # one writer; the gather above was the
+                                # collective part every process owed
+        elif self.transfer_async and async_now:
             # enqueue the D2H copies without blocking; the writer thread
             # harvests the (by then usually complete) host values
             for x in leaves:
@@ -351,7 +369,10 @@ class CheckpointManager:
                     f"shape mismatch on {manifest['keypaths'][i]}: "
                     f"{a.shape} vs {ref.shape}")
             if sh is not None:
-                out.append(jax.device_put(a, sh))
+                # put_global: plain device_put on addressable shardings,
+                # per-process addressable-shard assembly on process-
+                # spanning ones (elastic restore onto a multi-host mesh)
+                out.append(put_global(a, sh))
             else:
                 out.append(jnp.asarray(a, dtype=ref.dtype))
         return jax.tree.unflatten(treedef, out), step

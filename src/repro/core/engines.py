@@ -33,7 +33,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.topology import (Grouping, Topology, build_learner_topology)
 from repro.data.pipeline import Chunk, ChunkedStream
-from repro.distributed.sharding import leading_axis_spec, mesh_context
+from repro.distributed.sharding import (leading_axis_spec, mesh_context,
+                                        mesh_spans_processes, put_global)
 
 
 class Engine:
@@ -607,6 +608,18 @@ class ShardMapEngine(JitEngine):
                  fuse_boundary: bool = True):
         super().__init__(donate=donate, fuse_boundary=fuse_boundary)
         self.mesh = mesh
+        self._spans = None
+
+    @property
+    def spans_processes(self) -> bool:
+        """Whether this engine's mesh places shards on other processes
+        (multi-host run) -- placement then goes through per-process
+        addressable shards and EVERY carry leaf must live on the global
+        mesh (a committed single-device leaf mixed into a global jit is a
+        device-set error)."""
+        if self._spans is None:
+            self._spans = mesh_spans_processes(self.mesh)
+        return self._spans
 
     def _spec_fits(self, shape, spec) -> bool:
         """A PartitionSpec is usable on `shape` iff every named axis exists
@@ -637,7 +650,10 @@ class ShardMapEngine(JitEngine):
             if isinstance(x, jax.Array) \
                     and getattr(x, "sharding", None) == sharding:
                 return x
-            return jax.device_put(x, sharding)
+            # put_global degrades to device_put on a single-process mesh
+            # and assembles from addressable shards when the mesh spans
+            # processes (only the local shards can be written here)
+            return put_global(x, sharding)
         return jax.lax.with_sharding_constraint(x, sharding)
 
     def _make_step(self, topology: Topology):
@@ -703,6 +719,10 @@ class ShardMapEngine(JitEngine):
         topology = self._as_topology(topology)
         carry = dict(carry)
         carry["states"] = self._shard_states(topology, carry["states"])
+        if self.spans_processes and carry.get("feedback") is not None:
+            # restored feedback leaves are host arrays; they must join the
+            # states on the global mesh before the first post-resume step
+            carry["feedback"] = self._globalize(carry["feedback"])
         return carry
 
     def _grouping_of(self, topology, proc_name) -> Grouping | None:
@@ -721,4 +741,22 @@ class ShardMapEngine(JitEngine):
                 out[name] = jax.tree.map(
                     lambda x: self._hint_leaf(
                         x, leading_axis_spec("model", x), place=True), st)
+        if self.spans_processes:
+            out = {name: self._globalize(st) for name, st in out.items()}
         return out
+
+    def _globalize(self, tree):
+        """On a process-spanning mesh, leaves without a (fitting) hint must
+        STILL live on the global mesh: replicate them.  A jit that mixes
+        global-mesh arrays with per-process committed arrays raises a
+        device-set mismatch, so replicate-by-default is the only safe
+        fallback.  Leaves already on a process-spanning sharding (a prior
+        placement pass, or the restored-and-placed path) pass through."""
+        rep = NamedSharding(self.mesh, P())
+
+        def one(x):
+            if isinstance(x, jax.Array) and not x.is_fully_addressable:
+                return x
+            return put_global(x, rep)
+
+        return jax.tree.map(one, tree)

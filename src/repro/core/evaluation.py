@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.topology import Task
+from repro.distributed.sharding import host_value
 
 
 def stack_outputs(outs):
@@ -140,10 +141,17 @@ class MetricAccumulator:
             self._pending.append(metrics)
 
     def _fold(self, metrics):
-        seen = np.asarray(metrics["seen"], np.float64)
+        # host_value: a direct read on single-process runs; on a
+        # process-spanning mesh the metric columns come back replicated
+        # from the chunk program's cross-process reduction and read their
+        # LOCAL replica (partitioned leaves would gather -- a collective,
+        # which is why the multi-process driver folds on the main thread)
+        seen = np.asarray(host_value(metrics["seen"]), np.float64)
         zeros = np.zeros_like(seen)
-        corr = np.asarray(metrics.get("correct", zeros), np.float64)
-        abse = np.asarray(metrics.get("abs_err", zeros), np.float64)
+        corr = np.asarray(host_value(metrics.get("correct", zeros)),
+                          np.float64)
+        abse = np.asarray(host_value(metrics.get("abs_err", zeros)),
+                          np.float64)
         self._correct = self._correct + corr.sum(axis=0)
         self._abs_err = self._abs_err + abse.sum(axis=0)
         self._seen = self._seen + seen.sum(axis=0)
@@ -451,7 +459,8 @@ class ChunkedPrequentialEvaluation(Task):
                  remesh=None, chips_per_host: int = 1,
                  model_parallel: int = 1,
                  pipeline: bool | None = None,
-                 max_inflight_chunks: int = 2):
+                 max_inflight_chunks: int = 2,
+                 compile_cache_dir=None):
         from repro.core.engines import JitEngine
         self.learner = learner
         self.stream = stream
@@ -481,8 +490,14 @@ class ChunkedPrequentialEvaluation(Task):
         self.remesh = remesh         # (shape, axes) -> engine factory
         self.chips_per_host = int(chips_per_host)
         self.model_parallel = int(model_parallel)
-        self.pipeline = pipeline     # None -> pipelined (the default)
+        self.pipeline = pipeline     # None -> pipelined (the default;
+                                     # process-spanning meshes force the
+                                     # synchronous driver, see run())
         self.max_inflight_chunks = max(1, int(max_inflight_chunks))
+        self.compile_cache_dir = compile_cache_dir
+        if compile_cache_dir is not None:
+            from repro.runtime import compile_cache
+            compile_cache.enable(compile_cache_dir)
         self.report: dict = {}
 
     def _save(self, chunk_index: int, carry, acc: MetricAccumulator):
@@ -562,8 +577,7 @@ class ChunkedPrequentialEvaluation(Task):
             restored = self._restore()
             carry = restored[0]
         else:
-            host_carry = jax.tree.map(
-                lambda x: np.asarray(jax.device_get(x)), carry)
+            host_carry = jax.tree.map(host_value, carry)
             self.engine = self.remesh(shape, axes)
             carry = host_carry
             place = getattr(self.engine, "place_carry", None)
@@ -624,6 +638,10 @@ class ChunkedPrequentialEvaluation(Task):
             status = getattr(self.publisher, "status", None)
             if callable(status):
                 report["snapshots"] = status()
+        if self.compile_cache_dir is not None:
+            from repro.runtime import compile_cache
+            report["compile_cache"] = dict(
+                dir=str(self.compile_cache_dir), **compile_cache.stats())
         return PrequentialResult(
             metric=acc.metric, throughput=thr, curve=acc.curve,
             extra={"carry": carry, "seen": acc.seen,
@@ -633,7 +651,20 @@ class ChunkedPrequentialEvaluation(Task):
     def run(self, *, resume: bool = True) -> PrequentialResult:
         """Drive the stream.  ``pipeline=None``/``True`` uses the
         free-running async driver; ``pipeline=False`` the synchronous
-        oracle.  Both produce bit-identical results."""
+        oracle.  Both produce bit-identical results.
+
+        On a process-spanning mesh the synchronous driver is mandatory:
+        cross-process collectives (the chunk programs, checkpoint
+        gathers) must be issued in the SAME order on every process, and
+        the pipelined driver's drain thread interleaves its host syncs
+        with the dispatch loop nondeterministically per process."""
+        if bool(getattr(self.engine, "spans_processes", False)):
+            if self.pipeline:
+                raise ValueError(
+                    "pipeline=True is not supported on a process-spanning "
+                    "mesh: the drain thread would issue cross-process "
+                    "collectives out of order; use pipeline=None/False")
+            return self._run_sync(resume=resume)
         if self.pipeline is None or self.pipeline:
             return self._run_pipelined(resume=resume)
         return self._run_sync(resume=resume)

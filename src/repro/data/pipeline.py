@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.generators import bin_numeric
+from repro.distributed.sharding import spans_processes
 
 
 def _already_placed(x, sharding) -> bool:
@@ -35,7 +36,8 @@ def _already_placed(x, sharding) -> bool:
     redundant transfer (the prefetch thread commits chunks to device; the
     consumer must not pay that copy twice).  With no sharding requested,
     any device array qualifies (it is already on a device); with one, the
-    shardings must match exactly."""
+    shardings must match exactly.  Process-spanning shardings compare the
+    same way -- a global array built by a previous placement round-trips."""
     if not isinstance(x, jax.Array):
         return False
     if sharding is None:
@@ -44,10 +46,26 @@ def _already_placed(x, sharding) -> bool:
 
 
 def _place(x, sharding):
+    """Commit one payload leaf to its requested placement.
+
+    `sharding` may be a callable (leaf -> sharding), the idiom for chunk
+    payloads whose leaves have different ranks (``launch.distributed.
+    payload_sharding``).  When the resolved sharding spans processes, the
+    leaf is this process's ADDRESSABLE PORTION of the global chunk (each
+    process fetches only its own batch columns) and the global array is
+    assembled via ``jax.make_array_from_process_local_data``; device_put
+    would mis-read the local slab as the full logical value.
+    """
+    if callable(sharding):
+        sharding = sharding(x)
     if _already_placed(x, sharding):
         return x
-    return jax.device_put(x) if sharding is None \
-        else jax.device_put(x, sharding)
+    if sharding is None:
+        return jax.device_put(x)
+    if spans_processes(sharding):
+        return jax.make_array_from_process_local_data(
+            sharding, np.asarray(x))
+    return jax.device_put(x, sharding)
 
 
 class StreamPipeline:

@@ -102,6 +102,29 @@ def active_mesh() -> Mesh | None:
     return _ACTIVE_MESH.get()
 
 
+_SUPPRESS_SPMD_GATHER: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_suppress_spmd_gather", default=False)
+
+
+@contextlib.contextmanager
+def suppress_spmd_member_gather():
+    """Inside a fleet vmap the mesh's 'data' axis partitions TENANTS, not
+    the member axis the inner learner sees, so a member-axis shard_map
+    would bind the wrong physical axis.  LearnerFleet wraps its vmapped
+    family calls in this context; mesh-aware member code (the ensemble's
+    pooled split check) then keeps the single-shard formulation, which
+    GSPMD batches per tenant."""
+    token = _SUPPRESS_SPMD_GATHER.set(True)
+    try:
+        yield
+    finally:
+        _SUPPRESS_SPMD_GATHER.reset(token)
+
+
+def spmd_member_gather_suppressed() -> bool:
+    return _SUPPRESS_SPMD_GATHER.get()
+
+
 def leading_axis_spec(axis: str, leaf) -> P | None:
     """P(axis, None, ..., None) matching the leaf's rank -- the learner
     ``state_sharding`` idiom (shard the leading state axis, replicate the
@@ -279,6 +302,64 @@ def constrain(x, *logical):
         else:
             spec.append(None)
     return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# --- process-spanning placement ---------------------------------------------
+# On a multi-process mesh only the local shards of an array are
+# addressable: host-local reads (np.asarray / jax.device_get) raise, and
+# placement must go through per-process addressable shards.  These four
+# helpers are the single chokepoint the engines / chunked pipeline /
+# checkpointing route through, so the rest of the codebase never needs to
+# know whether a sharding spans processes.
+
+def spans_processes(sharding) -> bool:
+    """True when `sharding` has shards this process cannot address."""
+    try:
+        return not sharding.is_fully_addressable
+    except AttributeError:
+        return False
+
+
+def mesh_spans_processes(mesh: Mesh) -> bool:
+    import numpy as np
+    me = jax.process_index()
+    return any(d.process_index != me for d in np.asarray(mesh.devices).flat)
+
+
+def put_global(x, sharding):
+    """Place a value onto `sharding`, which may span processes.
+
+    The fully-addressable case is a plain ``jax.device_put``.  The
+    process-spanning case assumes every process holds the same logical
+    value (host-restored checkpoints, deterministic inits) and assembles
+    the global array from this process's addressable shards only.
+    """
+    if sharding is None or not spans_processes(sharding):
+        return jax.device_put(x) if sharding is None \
+            else jax.device_put(x, sharding)
+    import numpy as np
+    host = x if isinstance(x, np.ndarray) else np.asarray(jax.device_get(x))
+    return jax.make_array_from_callback(
+        host.shape, sharding, lambda idx: host[idx])
+
+
+def host_value(x):
+    """The full logical value of `x` as a host numpy array.
+
+    Fully-addressable arrays read directly; fully-replicated
+    process-spanning arrays read their local replica; partitioned
+    process-spanning arrays go through a cross-process all-gather (a
+    COLLECTIVE -- every process must call this in the same order).
+    """
+    import numpy as np
+    if not isinstance(x, jax.Array):
+        return np.asarray(x)
+    if x.is_fully_addressable:
+        return np.asarray(jax.device_get(x))
+    if x.is_fully_replicated:
+        return np.asarray(x)
+    from jax.experimental import multihost_utils
+    return np.asarray(multihost_utils.process_allgather(x, tiled=True))
 
 
 def shardings_for(axes_tree, mesh: Mesh, *, fsdp: bool = True, tp: bool = True):

@@ -46,6 +46,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (active_mesh,
+                                        spmd_member_gather_suppressed)
 from repro.ml import detectors, htree
 from repro.ml.detectors import DetectorBank
 from repro.ml.htree import TreeConfig
@@ -62,10 +66,15 @@ class EnsembleConfig:
     boost: bool = False
     detector: str = "adwin"      # adwin | ddm | eddm | ph | none
     gate_members: bool = True    # lax.cond-gate split work on any member due
-    split_check: str = "pool"    # pool (flattened [M*N] gather tile) |
+    split_check: str = "pool"    # pool (flattened [M*N] gather tile; under
+                                 # a mesh whose 'data' axis partitions the
+                                 # member axis it runs as an explicit
+                                 # shard_map: local top-K tile, all-gather
+                                 # of candidates, global top-K, scatter
+                                 # back by shard offset) |
                                  # member (per-member full pass behind the
-                                 # any-due gate; shard-friendly: never
-                                 # reshapes across the partitioned axis)
+                                 # any-due gate; the non-shard_map oracle
+                                 # for partitioned runs)
     route_impl: str | None = None  # member router override: pallas | gather
                                    # | fori | auto; None -> tree.route_impl
     detector_impl: str = "bank"  # bank (packed tensor pass) | vmap (legacy)
@@ -236,8 +245,21 @@ class OzaEnsemble:
             due_all = (trees["split_attr"] < 0) & \
                 (trees["since_attempt"] >= tc.n_min)
             if ec.split_check == "pool":
+                # under a mesh that partitions the member axis, the [M, N]
+                # -> [M*N] flatten + global gather tile would make GSPMD
+                # materialize cross-shard layouts; reformulate the pooled
+                # check as an explicit shard_map (local tile, candidate
+                # all-gather, global top-K) -- bit-identical, see below
+                mesh = active_mesh()
+                shards = (int(mesh.shape["data"]) if mesh is not None
+                          and "data" in mesh.axis_names else 1)
+                gathered = split_gathered
+                if (shards > 1 and M % shards == 0
+                        and not spmd_member_gather_suppressed()):
+                    gathered = partial(self._split_pool_spmd, mesh=mesh,
+                                       n_shards=shards)
                 trees = htree.gated_check(jnp.sum(due_all.astype(i32)), K,
-                                          split_gathered, split_all,
+                                          gathered, split_all,
                                           lambda ts: ts, trees)
             elif ec.split_check == "member":
                 # the shard-friendly gate: the [M, N] -> [M*N] flatten of
@@ -265,6 +287,83 @@ class OzaEnsemble:
         metrics = {"correct": correct, "seen": jnp.asarray(y.shape[0], f32),
                    "drifts": n_drift.astype(f32)}
         return new_state, metrics
+
+    def _split_pool_spmd(self, ts, *, mesh, n_shards):
+        """The pooled split check as an explicit shard_map program over the
+        partitioned member axis ('data').
+
+        Per shard: flatten the local [M/S, N] pool, take the local top-K
+        due tile (K = the global check_tile), all-gather ONLY those <= K
+        candidate rows across shards, re-rank globally, run the gain
+        reduction on the winning K rows, and scatter decisions back by
+        global-index-minus-shard-offset.  Bit-identical to the
+        single-shard ``split_gathered`` (and the "member" oracle): the
+        gate guarantees n_due <= K, every due row survives its local
+        top-K, per-row decide outputs depend only on that row's gathered
+        stats, and apply_splits consumes scattered values only where
+        ``should`` is True -- so filler-row selection order cannot leak
+        into the result."""
+        from jax.experimental.shard_map import shard_map
+
+        tc, tci, ec = self.tc, self._tc_inner, self.ec
+        M, N, C = ec.n_members, tc.max_nodes, tc.n_classes
+        K = min(tc.check_tile, M * N)
+        LN = (M // n_shards) * N          # local pool rows per shard
+        K_loc = min(K, LN)
+
+        def shard_fn(ts_loc):
+            M_loc = M // n_shards
+            due = (ts_loc["split_attr"] < 0) & \
+                (ts_loc["since_attempt"] >= tc.n_min)
+            due_f = due.reshape(LN)
+            flat = {k: ts_loc[k].reshape((LN,) + ts_loc[k].shape[2:])
+                    for k in htree._DECIDE_KEYS}
+            score = jnp.where(due_f, flat["since_attempt"], -1.0)
+            loc_idx = jax.lax.top_k(score, K_loc)[1]
+            shard = jax.lax.axis_index("data")
+            cand = {k: flat[k][loc_idx] for k in htree._DECIDE_KEYS}
+            cand["_score"] = score[loc_idx]
+            cand["_gidx"] = loc_idx.astype(i32) + shard.astype(i32) * LN
+            g = jax.tree.map(
+                lambda v: jax.lax.all_gather(v, "data", axis=0, tiled=True),
+                cand)                      # [n_shards*K_loc, ...]
+            sel = jax.lax.top_k(g["_score"], K)[1]
+            sub = {k: g[k][sel] for k in htree._DECIDE_KEYS}
+            s_k, a_k, b_k = htree._decide_splits_impl(sub, tci)
+            left_k, right_k = htree.child_counts_from_stats(
+                sub["stats"], a_k, b_k)
+            # scatter each decided row back to its owning shard; foreign
+            # rows land on a scratch row past the local pool
+            local = g["_gidx"][sel] - shard.astype(i32) * LN
+            tgt = jnp.where((local >= 0) & (local < LN), local, LN)
+
+            def scat(val, dtype, trail=()):
+                z = jnp.zeros((LN + 1,) + trail, dtype)
+                return z.at[tgt].set(val.astype(dtype))[:LN]
+
+            should = scat(s_k, bool).reshape(M_loc, N)
+            attr = scat(a_k, i32).reshape(M_loc, N)
+            tbin = scat(b_k, i32).reshape(M_loc, N)
+            left = scat(left_k, f32, (C,)).reshape(M_loc, N, C)
+            right = scat(right_k, f32, (C,)).reshape(M_loc, N, C)
+            out = dict(ts_loc)
+            out["since_attempt"] = jnp.where(due, 0.0, out["since_attempt"])
+
+            def apply_members(t):
+                def one(tree, s, a, b, lc, rc):
+                    tree, _ = htree.apply_splits(tree, s, a, b, tci,
+                                                 child_counts=(lc, rc))
+                    return tree
+                return jax.vmap(one)(t, should, attr, tbin, left, right)
+
+            # the rewiring gate must agree across shards: psum the local
+            # landed-split counts (jnp.any of a local slice would diverge)
+            landed = jax.lax.psum(jnp.sum(should.astype(i32)), "data")
+            return jax.lax.cond(landed > 0, apply_members, lambda t: t, out)
+
+        specs = jax.tree.map(lambda _: P("data"), ts)
+        return shard_map(shard_fn, mesh=mesh, in_specs=(specs,),
+                         out_specs=specs, check_rep=False)(ts)
 
     def run(self, state, x_stream, y_stream):
         def body(st, xy):

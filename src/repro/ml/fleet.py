@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import suppress_spmd_member_gather
 from repro.ml.amrules import AMRules, HAMR
 from repro.ml.clustream import CluStream
 from repro.ml.clustream import merge as _clustream_merge
@@ -101,7 +102,8 @@ class LearnerFleet:
 
     def init(self, key=None):
         key = jax.random.PRNGKey(0) if key is None else key
-        tenant = jax.vmap(self.learner.init)(self.tenant_keys(key))
+        with suppress_spmd_member_gather():
+            tenant = jax.vmap(self.learner.init)(self.tenant_keys(key))
         return {"tenant": tenant,
                 "cursor": jnp.zeros((self.n_tenants,), i32)}
 
@@ -112,12 +114,15 @@ class LearnerFleet:
         the leading fleet axis (``x: [F, B, ...]``, ``y: [F, B]``; the
         engine's scan slices them out of ``[T, F, B, ...]`` payloads).
         Returns metrics with ``[F]`` leaves -- one column per tenant."""
-        tenant, metrics = jax.vmap(self.learner.step)(state["tenant"], *args)
+        with suppress_spmd_member_gather():
+            tenant, metrics = jax.vmap(self.learner.step)(
+                state["tenant"], *args)
         return {"tenant": tenant, "cursor": state["cursor"] + 1}, metrics
 
     def _boundary(self, state):
-        return {"tenant": jax.vmap(self.learner.boundary)(state["tenant"]),
-                "cursor": state["cursor"]}
+        with suppress_spmd_member_gather():
+            tenant = jax.vmap(self.learner.boundary)(state["tenant"])
+        return {"tenant": tenant, "cursor": state["cursor"]}
 
     # ------------------------------------------------------------- merge
 

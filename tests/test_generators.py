@@ -1,0 +1,103 @@
+"""RandomTreeGenerator.sample_binned vs the float sample path.
+
+The packed-nibble sampler draws one uint32 word per eight attributes and
+masks each nibble to log2(n_bins) bits; it must be distributionally
+indistinguishable from ``bin_numeric(sample(...))`` on the numeric
+columns (the float path's categorical columns quantize onto at most
+n_vals distinct bins, so only the numeric marginals are comparable), and
+its labels must come from the SAME hidden tree walked on the bin
+midpoints -- exactly, over a sweep of depths, bin counts, attribute
+mixes, and seeds.
+"""
+
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.generators import RandomTreeGenerator, bin_numeric
+
+
+def _midpoint_walk_labels(gen, x):
+    """Re-walk the generator's hidden tree in numpy on float attrs x."""
+    attr = np.asarray(gen._attr)
+    thresh = np.asarray(gen._thresh)
+    node = np.zeros(x.shape[0], np.int64)
+    for _ in range(gen.depth):
+        a = attr[node]
+        v = x[np.arange(x.shape[0]), a]
+        node = 2 * node + 1 + (v > thresh[node]).astype(np.int64)
+    leaf = node - (2 ** gen.depth - 1)
+    return np.asarray(gen._leaf_label)[leaf]
+
+
+LABEL_SWEEP = list(itertools.product(
+    (2, 4, 6),              # depth
+    (2, 4, 8, 16),          # n_bins
+    ((0, 4), (3, 2), (5, 1)),   # (n_cat, n_num)
+    (7, 1234),              # generator seed
+))
+
+
+@pytest.mark.parametrize("depth,n_bins,shape,gseed", LABEL_SWEEP)
+def test_sample_binned_labels_are_midpoint_tree_walk(depth, n_bins, shape,
+                                                     gseed):
+    """sample_binned's labels == the hidden tree on the bin midpoints."""
+    n_cat, n_num = shape
+    gen = RandomTreeGenerator(n_cat=n_cat, n_num=n_num, depth=depth,
+                              seed=gseed)
+    bins, y = gen.sample_binned(jax.random.PRNGKey(gseed * 13 + depth), 128,
+                                n_bins=n_bins)
+    bins, y = np.asarray(bins), np.asarray(y)
+    assert bins.dtype == np.int32 and y.dtype == np.int32
+    assert bins.shape == (128, n_cat + n_num) and y.shape == (128,)
+    assert bins.min() >= 0 and bins.max() < n_bins
+    mid = (bins.astype(np.float32) + 0.5) / n_bins
+    np.testing.assert_array_equal(y, _midpoint_walk_labels(gen, mid))
+
+
+MARGINAL_SWEEP = list(itertools.product(
+    (2, 4, 8, 16),          # n_bins
+    ((0, 5), (4, 3)),       # (n_cat, n_num)
+    (0, 99),                # key seed
+))
+
+
+@pytest.mark.parametrize("n_bins,shape,kseed", MARGINAL_SWEEP)
+def test_sample_binned_marginals_match_binned_sample(n_bins, shape, kseed):
+    """Per-bin marginal parity: pooled numeric-column bin frequencies of
+    sample_binned equal bin_numeric(sample(...)) within sampling noise,
+    and every sample_binned column is individually uniform."""
+    n_cat, n_num = shape
+    gen = RandomTreeGenerator(n_cat=n_cat, n_num=n_num, depth=3, seed=11)
+    n = 2048
+    k0, k1 = jax.random.split(jax.random.PRNGKey(kseed))
+    x_float, _ = gen.sample(k0, n)
+    ref = np.asarray(bin_numeric(x_float[:, n_cat:], n_bins))
+    bins, _ = gen.sample_binned(k1, n, n_bins=n_bins)
+    bins = np.asarray(bins)
+
+    p = 1.0 / n_bins
+    # pooled numeric-column marginals: two independent draws of the same
+    # distribution; 6-sigma band on the difference of frequencies
+    pooled = n * n_num
+    tol = 6.0 * np.sqrt(2.0 * p * (1 - p) / pooled)
+    f_ref = np.bincount(ref.reshape(-1), minlength=n_bins) / pooled
+    f_bin = (np.bincount(bins[:, n_cat:].reshape(-1), minlength=n_bins)
+             / pooled)
+    np.testing.assert_allclose(f_bin, f_ref, atol=tol)
+
+    # every sample_binned column (categorical slots included -- the packed
+    # path makes them uniform too) is uniform over the bins
+    col_tol = 6.0 * np.sqrt(p * (1 - p) / n)
+    for j in range(gen.n_attrs):
+        f = np.bincount(bins[:, j], minlength=n_bins) / n
+        np.testing.assert_allclose(f, p, atol=col_tol)
+
+
+@pytest.mark.parametrize("bad", [0, 3, 5, 6, 12, 32])
+def test_sample_binned_rejects_bad_bin_counts(bad):
+    gen = RandomTreeGenerator(n_cat=2, n_num=2, depth=3, seed=0)
+    with pytest.raises(ValueError, match="power of two"):
+        gen.sample_binned(jax.random.PRNGKey(0), 8, n_bins=bad)

@@ -520,3 +520,49 @@ else:
                                       np.full((F,), T))
         _assert_trees_identical(c0["states"], carry["states"])
         _assert_trees_identical(o0, outs)
+
+    @pytest.mark.parametrize("n_tenants", [N_DEVICES, 2 * N_DEVICES])
+    def test_fleet_tenant_reductions_stay_process_local(n_tenants):
+        """Under a process-spanning 'data' axis every tenant must land
+        WHOLE on one device -- and therefore inside one process, for any
+        process grouping that owns whole devices.  Mock a 2-process split
+        of the 8-device mesh (first half / second half, the layout
+        ``make_global_stream_mesh`` produces) and check, leaf by leaf of
+        ``LearnerFleet.state_sharding()``, via devices_indices_map: the
+        tenant axis splits on device boundaries only, non-tenant dims are
+        never partitioned, so no per-tenant reduction (stats scatter,
+        metric column, cursor bump) ever needs a cross-process
+        collective."""
+        from jax.sharding import NamedSharding
+        from repro.ml.fleet import LearnerFleet
+        from repro.ml.vht import VHT, VHTConfig
+
+        fleet = LearnerFleet(VHT(VHTConfig(ETC)), n_tenants)
+        mesh = make_stream_mesh("data")
+        shapes = jax.eval_shape(fleet.init, jax.random.PRNGKey(0))
+        specs = fleet.state_sharding()
+        order = list(mesh.devices.flat)
+        proc_of = {d: i // (N_DEVICES // 2) for i, d in enumerate(order)}
+
+        leaves = zip(
+            jax.tree.leaves(shapes),
+            jax.tree.leaves(specs, is_leaf=lambda v: isinstance(v, P)))
+        n_checked = 0
+        for shape, spec in leaves:
+            sh = NamedSharding(mesh, spec)
+            tenant_proc = {}
+            for dev, idx in sh.devices_indices_map(shape.shape).items():
+                rows, trailing = idx[0], idx[1:]
+                # non-tenant dims whole: a tenant's reduction never
+                # straddles devices
+                for dim, sl in zip(shape.shape[1:], trailing):
+                    assert (sl.start or 0) == 0 and \
+                        (sl.stop is None or sl.stop == dim), (spec, idx)
+                for f in range(*rows.indices(shape.shape[0])):
+                    tenant_proc.setdefault(f, set()).add(proc_of[dev])
+            assert set(tenant_proc) == set(range(n_tenants))
+            for f, procs in tenant_proc.items():
+                assert len(procs) == 1, \
+                    f"tenant {f} spans processes {procs} in {spec}"
+            n_checked += 1
+        assert n_checked >= 4    # stats/counters/clock/cursor at least

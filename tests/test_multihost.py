@@ -1,0 +1,417 @@
+"""Multi-host process-group runtime: one fused chunk program spanning
+processes.
+
+The real assertions run in SUBPROCESS worker groups (this file doubles as
+the worker script, like test_multidevice.py's umbrella): a 2-process x
+4-device group launched through ``launch_workers`` runs the same chunked
+VHT / OzaBag topologies as a single-process 8-device reference, each
+process feeding only its addressable batch columns, and the final carry,
+metric curves, and checkpoints must be BIT-identical:
+
+  * ``parity``  -- VHT and OzaBag (pool + member split checks) chunked
+    runs, 2x4 vs 1x8;
+  * pool-vs-member under the partitioned member axis: the shard_map
+    pooled split check against the per-member oracle;
+  * ``ckpt``/``resume`` -- a 2-process run checkpointed mid-stream and
+    resumed SINGLE-process (the mesh-independent checkpoint contract),
+    continuing bit-identically to the uninterrupted single-process run.
+
+The mocked partially-addressable tests at the bottom run in-process: they
+force ``spans_processes`` to True so the placement chokepoints
+(``_place``, ``put_global``, checkpoint save/restore, ``place_carry``)
+must take the process-spanning code paths -- these fail on a codebase
+that still routes through bare ``device_put``/``device_get``.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+# -------------------------------------------------------------- geometry
+N_GLOBAL = 8          # global device count in every configuration
+N_PROCS = 2           # distributed arm: 2 processes x 4 devices
+CHUNK_LEN = 12
+N_CHUNKS = 6
+CKPT_CHUNKS = 3       # the "killed" 2-process run stops here
+BATCH = 8
+N_ATTRS = 6
+N_BINS = 8
+
+
+# ======================================================================
+# worker side (runs in fresh subprocesses; jax imports stay lazy so the
+# process-group bootstrap lands before the backend initializes)
+# ======================================================================
+
+def _make_learner(arm: str):
+    from repro.ml.ensemble import EnsembleConfig, OzaEnsemble
+    from repro.ml.htree import TreeConfig
+    from repro.ml.vht import VHT, VHTConfig
+    tc = TreeConfig(n_attrs=N_ATTRS, n_bins=N_BINS, n_classes=2,
+                    max_nodes=31, n_min=15, check_tile=8)
+    if arm == "vht":
+        return VHT(VHTConfig(tc))
+    if arm in ("pool", "member"):
+        return OzaEnsemble(EnsembleConfig(
+            tree=tc, n_members=N_GLOBAL, split_check=arm))
+    raise ValueError(arm)
+
+
+def _full_stream():
+    """The full deterministic [T, B, ...] stream -- same on every
+    process; each process slices out its own batch columns."""
+    rng = np.random.RandomState(20260807)
+    t = CHUNK_LEN * N_CHUNKS
+    xs = rng.randint(0, N_BINS, size=(t, BATCH, N_ATTRS)).astype(np.int32)
+    ys = rng.randint(0, 2, size=(t, BATCH)).astype(np.int32)
+    return xs, ys
+
+
+def _make_stream(mesh, n_chunks: int):
+    import jax
+
+    from repro.data.pipeline import ChunkedStream
+    from repro.launch import distributed as dist
+    xs, ys = _full_stream()
+    pi, pc = jax.process_index(), jax.process_count()
+    cols = BATCH // pc
+    lo, hi = pi * cols, (pi + 1) * cols
+
+    def fetch(i):
+        sl = slice(i * CHUNK_LEN, (i + 1) * CHUNK_LEN)
+        return {"x": xs[sl, lo:hi], "y": ys[sl, lo:hi]}
+
+    return ChunkedStream.from_fn(fetch, n_chunks, CHUNK_LEN,
+                                 sharding=dist.payload_sharding(mesh))
+
+
+def _run_arm(arm: str, mesh, *, ckpt_dir=None, n_chunks: int = N_CHUNKS):
+    import jax
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.engines import ShardMapEngine
+    from repro.core.evaluation import ChunkedPrequentialEvaluation
+    ckpt = (CheckpointManager(ckpt_dir, keep=0)
+            if ckpt_dir is not None else None)
+    ev = ChunkedPrequentialEvaluation(
+        _make_learner(arm), _make_stream(mesh, n_chunks),
+        engine=ShardMapEngine(mesh), checkpoint=ckpt, checkpoint_every=1,
+        key=jax.random.PRNGKey(0), pipeline=False)
+    return ev.run()
+
+
+def _blob(res) -> dict:
+    """Flatten a run result to comparable host arrays.  host_value on a
+    partitioned leaf is a cross-process collective; flattening order is
+    deterministic, so every process issues the same gathers."""
+    import jax
+
+    from repro.distributed.sharding import host_value
+    out = {}
+    paths = jax.tree_util.tree_flatten_with_path(
+        res.extra["carry"]["states"])[0]
+    for kp, leaf in paths:
+        out["st" + jax.tree_util.keystr(kp)] = np.asarray(host_value(leaf))
+    out["curve"] = np.asarray(res.curve, np.float64)
+    out["seen"] = np.asarray(res.extra["seen"], np.float64)
+    return out
+
+
+def _worker_main(mode: str, outdir: str) -> None:
+    outdir = pathlib.Path(outdir)
+    from repro.launch import distributed as dist
+    dist.init_from_env()          # None -> plain single-process reference
+    import jax
+    assert jax.device_count() == N_GLOBAL, jax.device_count()
+    mesh = dist.make_global_stream_mesh()
+    results = {"process_count": np.int64(jax.process_count())}
+    if mode == "parity":
+        for arm in ("vht", "pool", "member"):
+            res = _run_arm(arm, mesh)
+            for k, v in _blob(res).items():
+                results[f"{arm}/{k}"] = v
+    elif mode == "ckpt":
+        _run_arm("vht", mesh, ckpt_dir=outdir / "ckpt",
+                 n_chunks=CKPT_CHUNKS)
+    elif mode == "resume":
+        res = _run_arm("vht", mesh, ckpt_dir=outdir / "ckpt")
+        for k, v in _blob(res).items():
+            results[f"vht/{k}"] = v
+    else:
+        raise SystemExit(f"unknown worker mode {mode!r}")
+    if jax.process_index() == 0:
+        np.savez(outdir / f"{mode}.npz", **results)
+    print(f"WORKER_OK {mode} p{jax.process_index()}/{jax.process_count()}")
+
+
+if __name__ == "__main__":
+    _worker_main(sys.argv[1], sys.argv[2])
+    raise SystemExit(0)
+
+
+# ======================================================================
+# pytest side
+# ======================================================================
+
+def _single_process_env() -> dict:
+    """Env for the 1-process x 8-device reference worker: forced host
+    devices, no REPRO_DIST_* contract."""
+    from repro.launch import distributed as dist
+    from repro.launch.mesh import force_host_devices
+    env = dict(os.environ)
+    for k in (dist.ENV_COORD, dist.ENV_NPROC, dist.ENV_PROC,
+              dist.ENV_LOCAL_DEVICES):
+        env.pop(k, None)
+    env.pop("XLA_FLAGS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    force_host_devices(N_GLOBAL, env)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _run_single(mode: str, outdir: pathlib.Path) -> str:
+    import subprocess
+    r = subprocess.run(
+        [sys.executable, __file__, mode, str(outdir)],
+        env=_single_process_env(), capture_output=True, text=True,
+        timeout=600)
+    if r.returncode != 0:
+        raise RuntimeError(f"reference worker failed:\n{r.stdout[-4000:]}\n"
+                           f"{r.stderr[-4000:]}")
+    return r.stdout
+
+
+def _run_group(mode: str, outdir: pathlib.Path) -> list:
+    from repro.launch.distributed import launch_workers
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return launch_workers(
+        N_PROCS, [__file__, mode, str(outdir)],
+        devices_per_process=N_GLOBAL // N_PROCS, env=env, timeout=600)
+
+
+@pytest.fixture(scope="module")
+def multihost_runs(tmp_path_factory):
+    """Run every subprocess arm once; the tests below assert facets."""
+    root = tmp_path_factory.mktemp("multihost")
+    ref_dir = root / "ref"
+    dist_dir = root / "dist"
+    resume_dir = root / "resume"
+    for d in (ref_dir, dist_dir, resume_dir):
+        d.mkdir()
+    logs = {
+        "ref": _run_single("parity", ref_dir),
+        "dist": _run_group("parity", dist_dir),
+        "ckpt": _run_group("ckpt", resume_dir),
+        "resume": _run_single("resume", resume_dir),
+    }
+    return {
+        "ref": dict(np.load(ref_dir / "parity.npz")),
+        "dist": dict(np.load(dist_dir / "parity.npz")),
+        "resume": dict(np.load(resume_dir / "resume.npz")),
+        "logs": logs,
+        "ckpt_dir": resume_dir / "ckpt",
+    }
+
+
+def _assert_identical(a: dict, b: dict, keys_a, keys_b=None, label=""):
+    keys_b = keys_a if keys_b is None else keys_b
+    assert len(list(keys_a)) > 0
+    for ka, kb in zip(keys_a, keys_b):
+        x, y = a[ka], b[kb]
+        assert x.dtype == y.dtype, (label, ka, x.dtype, y.dtype)
+        np.testing.assert_array_equal(x, y, err_msg=f"{label}: {ka}")
+
+
+class TestMultiHostParity:
+    def test_group_really_spanned_processes(self, multihost_runs):
+        assert int(multihost_runs["dist"]["process_count"]) == N_PROCS
+        assert int(multihost_runs["ref"]["process_count"]) == 1
+        for out in multihost_runs["logs"]["dist"]:
+            assert "WORKER_OK parity" in out
+
+    def test_vht_2x4_bit_identical_to_1x8(self, multihost_runs):
+        ref, dst = multihost_runs["ref"], multihost_runs["dist"]
+        keys = sorted(k for k in ref if k.startswith("vht/"))
+        _assert_identical(ref, dst, keys, label="vht 2x4 vs 1x8")
+
+    def test_ozabag_pool_2x4_bit_identical_to_1x8(self, multihost_runs):
+        ref, dst = multihost_runs["ref"], multihost_runs["dist"]
+        keys = sorted(k for k in ref if k.startswith("pool/"))
+        _assert_identical(ref, dst, keys, label="ozabag-pool 2x4 vs 1x8")
+
+    def test_pool_shardmap_matches_member_oracle(self, multihost_runs):
+        """The shard_map pooled split check under the process-partitioned
+        member axis lands the same splits as the per-member oracle."""
+        dst = multihost_runs["dist"]
+        pool = sorted(k for k in dst if k.startswith("pool/st"))
+        member = [k.replace("pool/", "member/", 1) for k in pool]
+        _assert_identical(dst, dst, pool, member,
+                          label="pool(shard_map) vs member oracle")
+
+    def test_resume_across_process_count_change(self, multihost_runs):
+        """2-process run checkpointed at chunk 3, resumed single-process:
+        the continuation is bit-identical to the uninterrupted
+        single-process run."""
+        ref, res = multihost_runs["ref"], multihost_runs["resume"]
+        keys = sorted(k for k in ref if k.startswith("vht/"))
+        _assert_identical(ref, res, keys, label="2-proc ckpt -> 1-proc")
+        assert int(res["process_count"]) == 1
+        # the 2-process phase really wrote the mid-stream checkpoints
+        steps = sorted(p.name for p in
+                       multihost_runs["ckpt_dir"].glob("step_*"))
+        assert any(p.endswith(f"{CKPT_CHUNKS:010d}") for p in steps), steps
+
+
+# ======================================================================
+# mocked partially-addressable shardings (in-process regression tests)
+# ======================================================================
+
+def _mesh1():
+    import jax
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+class TestPartiallyAddressablePaths:
+    def test_place_routes_process_local_data(self, monkeypatch):
+        """A process-spanning payload sharding must assemble the global
+        chunk from the process's addressable slab, never device_put it
+        (which would mis-read the local slab as the full value)."""
+        import jax
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.data import pipeline as pl
+        sh = NamedSharding(_mesh1(), P())
+        calls = {"local": 0, "put": 0}
+        real = jax.make_array_from_process_local_data
+        monkeypatch.setattr(pl, "spans_processes", lambda s: True)
+        monkeypatch.setattr(
+            jax, "make_array_from_process_local_data",
+            lambda s, x, *a, **k: (calls.__setitem__(
+                "local", calls["local"] + 1), real(s, x, *a, **k))[1])
+        monkeypatch.setattr(
+            pl.jax, "device_put",
+            lambda *a, **k: (_ for _ in ()).throw(
+                AssertionError("device_put on a process-spanning leaf")))
+        x = np.arange(24.0, dtype=np.float32).reshape(2, 3, 4)
+        out = pl._place(x, lambda leaf: sh)
+        assert calls["local"] == 1
+        np.testing.assert_array_equal(np.asarray(out), x)
+
+    def test_put_global_assembles_from_addressable_shards(self, monkeypatch):
+        import jax
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed import sharding as shd
+        sh = NamedSharding(_mesh1(), P())
+        monkeypatch.setattr(shd, "spans_processes", lambda s: True)
+        calls = {"cb": 0}
+        real = jax.make_array_from_callback
+        monkeypatch.setattr(
+            jax, "make_array_from_callback",
+            lambda shape, s, cb: (calls.__setitem__("cb", calls["cb"] + 1),
+                                  real(shape, s, cb))[1])
+        x = np.arange(10.0, dtype=np.float32)
+        out = shd.put_global(x, sh)
+        assert calls["cb"] == 1
+        got = np.asarray(out)
+        assert got.dtype == x.dtype
+        np.testing.assert_array_equal(got, x)
+
+    def test_checkpoint_save_gathers_on_caller_thread(
+            self, monkeypatch, tmp_path):
+        """Spanning leaves force the collective gather onto save()'s
+        calling thread (same order on every process) with one writer;
+        the roundtrip stays bit-exact."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.checkpoint import manager as mgr
+        monkeypatch.setattr(mgr, "spans_processes", lambda s: True)
+        gathers = {"n": 0}
+        real_hv = mgr.host_value
+        monkeypatch.setattr(
+            mgr, "host_value",
+            lambda x: (gathers.__setitem__("n", gathers["n"] + 1),
+                       real_hv(x))[1])
+        cm = mgr.CheckpointManager(tmp_path, async_write=True)
+        tree = {"w": jnp.arange(6, dtype=jnp.float32),
+                "cursor": np.int64(4)}
+        cm.save(3, tree)
+        assert gathers["n"] == len(jax.tree.leaves(tree))
+        cm.wait()
+        blob, step = cm.restore_structured()
+        assert step == 3 and int(blob["cursor"]) == 4
+        np.testing.assert_array_equal(
+            blob["w"], np.arange(6, dtype=np.float32))
+
+    def test_restore_places_through_put_global(self, monkeypatch, tmp_path):
+        """restore(shardings=...) must route sharded leaves through
+        put_global so elastic restore works onto process-spanning
+        meshes."""
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.checkpoint import manager as mgr
+        cm = mgr.CheckpointManager(tmp_path, async_write=False)
+        tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+        cm.save(1, tree, blocking=True)
+        sh = NamedSharding(_mesh1(), P())
+        calls = {"n": 0}
+        real = mgr.put_global
+        monkeypatch.setattr(
+            mgr, "put_global",
+            lambda x, s: (calls.__setitem__("n", calls["n"] + 1),
+                          real(x, s))[1])
+        out, _ = cm.restore(tree, shardings={"w": sh})
+        assert calls["n"] == 1
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(8))
+
+    def test_place_carry_globalizes_on_spanning_mesh(self, monkeypatch):
+        """On a process-spanning mesh every restored carry leaf --
+        including unhinted ones and the feedback slot -- must come back
+        as a global-mesh array (a committed single-device leaf mixed into
+        the global jit is a device-set error)."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import engines as eng
+        from repro.ml.htree import TreeConfig
+        from repro.ml.vht import VHT, VHTConfig
+        monkeypatch.setattr(eng, "mesh_spans_processes", lambda m: True)
+        puts = {"n": 0}
+        real = eng.put_global
+        monkeypatch.setattr(
+            eng, "put_global",
+            lambda x, s: (puts.__setitem__("n", puts["n"] + 1),
+                          real(x, s))[1])
+        learner = VHT(VHTConfig(TreeConfig(
+            n_attrs=4, n_bins=4, n_classes=2, max_nodes=15)))
+        e = eng.ShardMapEngine(_mesh1())
+        assert e.spans_processes
+        carry = e.init(learner, jax.random.PRNGKey(0))
+        host = jax.tree.map(lambda x: np.asarray(x), carry)
+        host["feedback"] = {"fb": np.zeros((3,), np.float32)}
+        placed = e.place_carry(learner, host)
+        assert puts["n"] > 0
+        for leaf in jax.tree.leaves(placed):
+            assert isinstance(leaf, jax.Array)
+        np.testing.assert_array_equal(
+            np.asarray(placed["feedback"]["fb"]), np.zeros((3,)))
+        st0 = jax.tree.leaves(carry["states"])
+        st1 = jax.tree.leaves(placed["states"])
+        for a, b in zip(st0, st1):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
